@@ -1,0 +1,160 @@
+"""Shared benchmark machinery: scale presets, policy tuning, CSV rows.
+
+The paper's experiments (c=20,000, 3 years, 500 runs, SLA 1e-4) need cluster
+compute; the presets scale the system down while preserving the phenomena
+(heavy-tailed deployment mix, tail-risk admissions). Utilizations are
+comparable across policies within a preset; the paper-scale preset exists for
+the full reproduction on bigger hardware.
+
+Tuning follows the paper (§5.2 binary search subject to the SLA) as a
+two-stage vmapped parameter sweep: evaluate all candidate thresholds in
+parallel (PolicyParams is a traced pytree, so one compile serves every
+candidate), pick the largest parameter whose *aggregate* failure rate meets
+the scale-adjusted SLA, then refine once around it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AZURE_PRIORS, FIRST, SECOND, ZEROTH, geometric_grid,
+                        make_policy)
+from repro.sim import SimConfig, bca_ci, make_run, sla_failure_rate
+
+
+@dataclasses.dataclass(frozen=True)
+class Scale:
+    name: str
+    capacity: float
+    arrival_rate: float
+    horizon_hours: float
+    dt: float
+    max_slots: int
+    n_runs: int
+    n_thresholds: int
+    grid_points: int
+    tau: float            # scale-adjusted SLA
+
+
+SCALES = {
+    # calibrated so the paper's regime (cluster >> single deployment, tail
+    # risk from early heavy arrivals) appears at CPU-runnable cost
+    "tiny": Scale("tiny", 2_500.0, 0.125, 1.25 * 365 * 24, 12.0, 768, 4, 4,
+                  24, 1e-3),
+    "quick": Scale("quick", 5_000.0, 0.25, 1.5 * 365 * 24, 12.0, 1536, 8, 6,
+                   32, 5e-4),
+    "full": Scale("full", 20_000.0, 1.0, 3.0 * 365 * 24, 6.0, 8192, 24, 8,
+                  48, 1e-4),
+}
+
+
+def sim_config(scale: Scale, **over) -> SimConfig:
+    base = dict(capacity=scale.capacity, arrival_rate=scale.arrival_rate,
+                horizon_hours=scale.horizon_hours, dt=scale.dt,
+                max_slots=scale.max_slots, max_arrivals=5,
+                priors=AZURE_PRIORS)
+    base.update(over)
+    return SimConfig(**base)
+
+
+def grid_for(scale: Scale, cfg: SimConfig):
+    return geometric_grid(cfg.dt, cfg.horizon_hours * 3.0, scale.grid_points)
+
+
+def _isotonic(y: np.ndarray) -> np.ndarray:
+    """Pool-adjacent-violators isotonic regression (nondecreasing fit)."""
+    y = np.asarray(y, dtype=np.float64).copy()
+    w = np.ones_like(y)
+    blocks = [[i] for i in range(len(y))]
+    vals = list(y)
+    ws = list(w)
+    i = 0
+    while i < len(vals) - 1:
+        if vals[i] > vals[i + 1] + 1e-18:
+            tot = ws[i] + ws[i + 1]
+            vals[i] = (vals[i] * ws[i] + vals[i + 1] * ws[i + 1]) / tot
+            ws[i] = tot
+            blocks[i].extend(blocks[i + 1])
+            del vals[i + 1], ws[i + 1], blocks[i + 1]
+            i = max(i - 1, 0)
+        else:
+            i += 1
+    out = np.empty_like(y)
+    for v, b in zip(vals, blocks):
+        out[b] = v
+    return out
+
+
+def _eval_param_batch(run_fn, kind, params_vec, keys, capacity, marginal):
+    """[T] params × [R] runs -> dict of [T, R] metrics arrays."""
+
+    def one_param(p):
+        pol = make_policy(int(kind), threshold=p, rho=p, capacity=capacity,
+                          marginal=marginal)
+        return jax.vmap(lambda k: run_fn(k, pol))(keys)
+
+    metrics = jax.vmap(one_param)(params_vec)
+    return metrics
+
+
+def tune_and_eval(scale: Scale, kind: int, cfg: SimConfig, *,
+                  marginal: bool = False, seed: int = 0,
+                  lo: float = None, hi: float = None) -> dict:
+    """Two-stage parallel sweep; returns tuned param + utilization CI."""
+    grid = grid_for(scale, cfg)
+    run_fn = make_run(cfg, grid, kind)
+    keys = jax.random.split(jax.random.PRNGKey(seed), scale.n_runs)
+    c = cfg.capacity
+    if kind == SECOND:
+        lo = np.log10(2e-4) if lo is None else lo
+        hi = np.log10(0.9) if hi is None else hi
+        to_param = lambda x: 10.0 ** x
+    else:
+        lo = 0.2 * c if lo is None else lo
+        hi = (1.0 if kind == ZEROTH else 1.05) * c if hi is None else hi
+        to_param = lambda x: x
+
+    best = None
+    t0 = time.time()
+    n_pts = scale.n_thresholds + (2 if kind == SECOND else 0)
+    for stage in range(2):
+        xs = np.linspace(lo, hi, n_pts)
+        params_vec = jnp.asarray([to_param(x) for x in xs], jnp.float32)
+        m = _eval_param_batch(run_fn, kind, params_vec, keys, c, marginal)
+        fails = np.asarray(m.failed_requests)     # [T, R]
+        reqs = np.asarray(m.total_requests)
+        utils = np.asarray(m.utilization)
+        agg_fail = fails.sum(1) / np.maximum(reqs.sum(1), 1.0)
+        # NOTE: we experimented with isotonic (PAV) smoothing of the
+        # empirical failure curve here; at 4 runs it pools single-run flukes
+        # into neighboring good parameters and is net harmful (see
+        # EXPERIMENTS.md §Paper). The raw max-feasible rule + the paper's
+        # importance sampling at --scale full is the statistically sound path.
+        feasible = agg_fail <= scale.tau
+        if feasible.any():
+            idx = int(np.max(np.nonzero(feasible)[0]))
+        else:
+            idx = 0
+        best = {
+            "param": float(to_param(xs[idx])),
+            "util": utils[idx],
+            "agg_fail": float(agg_fail[idx]),
+        }
+        # refine around the chosen index
+        span = (hi - lo) / (scale.n_thresholds - 1)
+        lo, hi = xs[idx] - span, xs[idx] + span
+    ci = bca_ci(best["util"], n_resamples=2_000)
+    return {
+        "kind": kind, "param": best["param"],
+        "utilization": ci.estimate, "ci_lo": ci.lo, "ci_hi": ci.hi,
+        "sla_fail": best["agg_fail"], "tau": scale.tau,
+        "seconds": round(time.time() - t0, 1),
+    }
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,38 @@
+"""Paper Fig. 1: value of deployment-specific priors — first/second moment
+policies (with marginal heuristic) at 0/1/5/50 pseudo-observations. Paper:
+1 obs lifts second-moment utilization to ~79.5%, 50 obs to ~83.8%."""
+from __future__ import annotations
+
+import time
+
+from repro.core import FIRST, SECOND
+from repro.sim import PSEUDO
+
+from .common import SCALES, csv_row, sim_config, tune_and_eval
+
+OBS_LEVELS = (0, 1, 5, 50)
+
+
+def run(scale_name: str = "tiny", seed: int = 0,
+        obs_levels=None) -> list:
+    scale = SCALES[scale_name]
+    if obs_levels is None:  # CPU preset trims the costliest levels
+        obs_levels = (0, 1, 5) if scale_name == "tiny" else OBS_LEVELS
+    rows = []
+    for kind, kname in ((FIRST, "first"), (SECOND, "second")):
+        for n_obs in obs_levels:
+            cfg = sim_config(scale, prior_mode=PSEUDO, n_pseudo_obs=n_obs)
+            t0 = time.time()
+            res = tune_and_eval(scale, kind, cfg, marginal=True,
+                                seed=seed + n_obs)
+            rows.append(csv_row(
+                f"fig1/{kname}_obs{n_obs}", (time.time() - t0) * 1e6,
+                f"util={res['utilization']:.4f}"
+                f"(ci {res['ci_lo']:.4f}:{res['ci_hi']:.4f})"
+                f" param={res['param']:.4g} sla={res['sla_fail']:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,79 @@
+"""Kernel/algorithm microbenchmarks (CPU wall time; TPU numbers come from the
+roofline analysis of the dry-run artifacts).
+
+Measures the beyond-paper algorithmic wins that are observable on CPU:
+  * continuous O(N) moment curves vs the paper's 5x600-step discrete cascade
+  * vectorized policy evaluation throughput (deployments x horizon per sec)
+Plus interpret-mode correctness timing of each Pallas kernel (not a perf
+number on CPU; recorded so regressions in kernel complexity show up).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AZURE_PRIORS, belief_from_prior, geometric_grid
+from repro.core.moments import moment_curves, moment_curves_discrete
+
+from .common import csv_row
+
+
+def _timeit(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6  # us
+
+
+def run(scale_name: str = "tiny", seed: int = 0) -> list:
+    rows = []
+    d = 1024
+    bel = belief_from_prior(AZURE_PRIORS, (d,))
+    cores = jnp.full((d,), 5.0)
+    grid = geometric_grid(6.0, 3 * 365 * 24.0, 48)
+
+    cont = jax.jit(lambda b, c: moment_curves(b, c, grid, AZURE_PRIORS,
+                                              d_points=32))
+    us_cont = _timeit(cont, bel, cores)
+    rows.append(csv_row("kernels/moment_curves_continuous_jnp", us_cont,
+                        f"D={d} N=48 curves_per_s={d / (us_cont/1e6):.3g}"))
+
+    # paper-faithful cascade: 5 horizons x 600 uniform steps
+    disc = jax.jit(lambda b, c: [
+        moment_curves_discrete(b, c, 600, h / 600, AZURE_PRIORS)
+        for h in (24.0, 168.0, 720.0, 8760.0, 26280.0)])
+    us_disc = _timeit(disc, bel, cores, n=2)
+    rows.append(csv_row("kernels/moment_curves_paper_cascade", us_disc,
+                        f"D={d} 5x600steps speedup_vs_continuous="
+                        f"{us_disc / us_cont:.1f}x"))
+
+    from repro.kernels.moment_curves.ops import moment_curves_kernel
+    kern = jax.jit(lambda b, c: moment_curves_kernel(
+        b, c, grid, AZURE_PRIORS, d_points=32, interpret=True))
+    us_kern = _timeit(kern, bel, cores, n=2)
+    rows.append(csv_row("kernels/moment_curves_pallas_interpret", us_kern,
+                        "correctness-path; TPU perf in roofline"))
+
+    from repro.kernels.flash_attention.ref import attention_ref
+    b, s, h, kvh, dh = 1, 1024, 8, 2, 128
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, s, kvh, dh), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, s, kvh, dh), jnp.bfloat16)
+    ref = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    us_ref = _timeit(ref, q, k, v, n=3)
+    flops = 4 * b * h * s * s * dh / 2
+    rows.append(csv_row("kernels/attention_ref_cpu", us_ref,
+                        f"s={s} gflops={flops/1e9:.1f} "
+                        f"cpu_gflops_s={flops / (us_ref/1e6) / 1e9:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,52 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Scale presets (see common.SCALES):
+  tiny  (default) laptop-class, minutes
+  quick           small-server, tens of minutes
+  full            the paper's c=20,000 / 3-year / SLA 1e-4 setting
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--scale tiny] [--only table2]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (ablation_marginal, fig1_priors, fig2_pricing, kernels_bench,
+               roofline, table2_policies)
+
+MODULES = {
+    "kernels": kernels_bench,
+    "roofline": roofline,
+    "table2": table2_policies,
+    "fig1": fig1_priors,
+    "fig2": fig2_pricing,
+    "ablation_marginal": ablation_marginal,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="tiny", choices=["tiny", "quick", "full"])
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset: " + ",".join(MODULES))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    names = list(MODULES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in names:
+        mod = MODULES[name]
+        try:
+            for row in mod.run(args.scale, args.seed):
+                print(row, flush=True)
+        except Exception as e:  # pragma: no cover
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            raise
+    print(f"# total_seconds={time.time() - t0:.0f}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

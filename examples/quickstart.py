@@ -1,0 +1,46 @@
+"""Quickstart: the paper's admission policies in 60 seconds.
+
+Builds a small simulated cluster, runs the industry-baseline threshold policy
+(zeroth moment) against the paper's second-moment (Cantelli) policy at the
+same SLA target, and prints the utilization gap — the paper's headline result.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core import (AZURE_PRIORS, SECOND, ZEROTH, geometric_grid,
+                        make_policy)
+from repro.sim import SimConfig, make_run
+
+
+def main():
+    cfg = SimConfig(capacity=1_000.0, arrival_rate=0.05,
+                    horizon_hours=180 * 24.0, dt=24.0, max_slots=256,
+                    max_arrivals=4, priors=AZURE_PRIORS)
+    grid = geometric_grid(cfg.dt, cfg.horizon_hours * 3, 24)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+
+    results = {}
+    for name, kind, pol in [
+        ("zeroth(baseline)", ZEROTH,
+         make_policy(ZEROTH, threshold=450.0, capacity=cfg.capacity)),
+        ("second(paper)", SECOND,
+         make_policy(SECOND, rho=0.15, capacity=cfg.capacity)),
+    ]:
+        run = make_run(cfg, grid, kind)
+        m = jax.vmap(lambda k: run(k, pol))(keys)
+        util = float(np.mean(np.asarray(m.utilization)))
+        fails = int(np.asarray(m.failed_requests).sum())
+        reqs = int(np.asarray(m.total_requests).sum())
+        results[name] = util
+        print(f"{name:18s} utilization={util:.3f} "
+              f"scale-out failures={fails}/{reqs}")
+
+    gain = results["second(paper)"] / results["zeroth(baseline)"] - 1
+    print(f"\nsecond-moment policy lifts utilization by {100 * gain:.0f}% "
+          f"relative (paper: ~30% at full scale)")
+
+
+if __name__ == "__main__":
+    main()

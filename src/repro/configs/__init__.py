@@ -1,0 +1,4 @@
+"""Per-architecture configs (one module per assigned arch) + input shapes."""
+from .shapes import SHAPES, ShapeConfig, applicable
+
+__all__ = ["SHAPES", "ShapeConfig", "applicable"]

@@ -1,0 +1,31 @@
+"""The paper's primary contribution: moment-based cluster admission control.
+
+Public API:
+  processes  — deployment stochastic processes + fitted Azure priors
+  belief     — conjugate Gamma belief state over scaling parameters
+  moments    — closed-form E[L_t]/V[L_t] curves (continuous + paper-discrete)
+  policies   — zeroth/first/second moment policies, marginal heuristic, tuning
+  pomdp      — the constrained-POMDP statement and tail bounds
+  pricing    — variance-based payment rule / elicitation (Prop. 4)
+"""
+from .processes import (AZURE_PRIORS, DeploymentParams, PopulationPriors,
+                        sample_params, sample_step_events, scaleout_rate,
+                        sample_pseudo_observations, sample_initial_size)
+from .belief import (GammaBelief, belief_from_prior, update_on_events,
+                     apply_pseudo_observations, observe_initial_size)
+from .moments import MomentCurves, moment_curves, moment_curves_discrete
+from .policies import (ZEROTH, FIRST, SECOND, PolicyParams, make_policy,
+                       geometric_grid, paper_cascade, decide, admit_sequential,
+                       is_safe, tune_threshold)
+from . import pomdp, pricing
+
+__all__ = [
+    "AZURE_PRIORS", "DeploymentParams", "PopulationPriors", "sample_params",
+    "sample_step_events", "scaleout_rate", "sample_pseudo_observations",
+    "sample_initial_size", "GammaBelief", "belief_from_prior",
+    "update_on_events", "apply_pseudo_observations", "observe_initial_size",
+    "MomentCurves", "moment_curves", "moment_curves_discrete", "ZEROTH",
+    "FIRST", "SECOND", "PolicyParams", "make_policy", "geometric_grid",
+    "paper_cascade", "decide", "admit_sequential", "is_safe",
+    "tune_threshold", "pomdp", "pricing",
+]

@@ -1,0 +1,99 @@
+"""Conjugate Gamma belief state over deployment scaling processes (paper §2.2).
+
+The provider cannot observe (lam, mu, sig); it maintains, per deployment slot,
+Gamma posteriors that start at the population prior and are updated from the
+observable events (core deaths + exposure, scale-out counts, scale-out sizes):
+
+  * mu  | data ~ Gamma(a  + #deaths,      b  + total core-hours observed)
+        (exponential lifetimes, right-censored cores contribute exposure only)
+  * sig | data ~ Gamma(as + sum(size-1),  bs + #size observations)
+        (size - 1 ~ Poisson(sig); the arrival size C0 counts as one observation)
+  * lam | data ~ Gamma(al + #scale-outs,  bl + E[mu**nu] * alive-hours)
+        (scale-outs ~ Poisson(lam * mu**nu * t); mu is latent, so the exposure
+        uses the posterior mean of mu**nu — an E-step approximation, documented
+        in DESIGN.md §4. This keeps the update conjugate and O(1).)
+
+All fields are arrays over deployment slots so the whole belief state is a jit
+friendly pytree.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import gammaln
+
+from .processes import PopulationPriors, PseudoObservations
+
+
+class GammaBelief(NamedTuple):
+    """Per-slot Gamma(shape, rate) posteriors for (mu, lam, sig)."""
+
+    mu_a: jax.Array
+    mu_b: jax.Array
+    lam_a: jax.Array
+    lam_b: jax.Array
+    sig_a: jax.Array
+    sig_b: jax.Array
+
+    def expected_mu_pow(self, p) -> jax.Array:
+        """E[mu**p] = Gamma(a+p)/Gamma(a) / b**p under mu ~ Gamma(a, b)."""
+        return jnp.exp(gammaln(self.mu_a + p) - gammaln(self.mu_a) - p * jnp.log(self.mu_b))
+
+
+def belief_from_prior(priors: PopulationPriors, shape=()) -> GammaBelief:
+    """Fresh belief equal to the population prior for every slot."""
+    full = lambda v: jnp.full(shape, v, dtype=jnp.float32)
+    return GammaBelief(
+        mu_a=full(priors.mu_shape), mu_b=full(priors.mu_rate),
+        lam_a=full(priors.lam_shape), lam_b=full(priors.lam_rate),
+        sig_a=full(priors.sig_shape), sig_b=full(priors.sig_rate),
+    )
+
+
+def update_on_events(
+    bel: GammaBelief,
+    *,
+    core_deaths: jax.Array,
+    exposure_core_hours: jax.Array,
+    n_scaleouts: jax.Array,
+    scaleout_cores: jax.Array,
+    alive_hours: jax.Array,
+    priors: PopulationPriors,
+) -> GammaBelief:
+    """One observation step. All args are per-slot arrays (zeros for no-ops).
+
+    ``exposure_core_hours`` is the total core-hours lived this step (both the
+    cores that died and the survivors — right-censored observations add
+    exposure to the rate parameter but no count to the shape).
+    ``scaleout_cores`` is the total cores requested, so sizes-minus-one sum to
+    ``scaleout_cores - n_scaleouts``.
+    """
+    mu_a = bel.mu_a + core_deaths
+    mu_b = bel.mu_b + exposure_core_hours
+    # E-step exposure for lam uses the *updated* mu posterior.
+    e_mu_nu = jnp.exp(gammaln(mu_a + priors.nu) - gammaln(mu_a) - priors.nu * jnp.log(mu_b))
+    lam_a = bel.lam_a + n_scaleouts
+    lam_b = bel.lam_b + e_mu_nu * alive_hours
+    sig_a = bel.sig_a + (scaleout_cores - n_scaleouts)
+    sig_b = bel.sig_b + n_scaleouts
+    return GammaBelief(mu_a, mu_b, lam_a, lam_b, sig_a, sig_b)
+
+
+def apply_pseudo_observations(bel: GammaBelief, obs: PseudoObservations,
+                              priors: PopulationPriors) -> GammaBelief:
+    """Fold paper-§6 pseudo observations into the belief (deployment-specific prior)."""
+    mu_a = bel.mu_a + obs.n_lifetimes
+    mu_b = bel.mu_b + obs.sum_lifetimes
+    e_mu_nu = jnp.exp(gammaln(mu_a + priors.nu) - gammaln(mu_a) - priors.nu * jnp.log(mu_b))
+    lam_a = bel.lam_a + obs.n_scaleouts
+    lam_b = bel.lam_b + e_mu_nu * obs.n_windows
+    sig_a = bel.sig_a + obs.sum_size_minus1
+    sig_b = bel.sig_b + obs.n_sizes
+    return GammaBelief(mu_a, mu_b, lam_a, lam_b, sig_a, sig_b)
+
+
+def observe_initial_size(bel: GammaBelief, c0: jax.Array) -> GammaBelief:
+    """The arrival request C0 ~ 1 + Poisson(sig) is itself a size observation."""
+    return bel._replace(sig_a=bel.sig_a + (c0 - 1), sig_b=bel.sig_b + 1.0)

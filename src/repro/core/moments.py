@@ -1,0 +1,385 @@
+"""Closed-form moment curves E[L_t], V[L_t] of a deployment's future size.
+
+This is the computational heart of the paper (Props. 2, 3, 5): under the
+provider's Gamma belief (a,b)=(mu_a,mu_b), (al,bl)=(lam_a,lam_b),
+(as,bs)=(sig_a,sig_b) for a deployment with C active cores, the future size is
+
+    L_t = M_t * D_t * (Q_t + B_t)
+
+with (paper §4) B_t = surviving initial cores, Q_t = surviving scale-out cores,
+M_t = max-lifetime survival, D_t = "has not died from zero cores". Factors are
+treated as uncorrelated (the paper's stated approximation).
+
+Two evaluation paths are provided:
+
+* ``moment_curves`` — **continuous-time closed forms** (re-derived; DESIGN.md
+  §4). Every horizon point costs O(1) (no inner sum over past steps), so a full
+  curve over an *arbitrary* (e.g. geometric) grid is O(N). This is the
+  optimized, beyond-paper formulation and the oracle for the Pallas kernel.
+
+* ``moment_curves_discrete`` — the **paper-faithful** uniform-grid formulation
+  (Poisson counts per step, Prop. 5 sums), evaluated for all n=1..N at once in
+  O(N) total via prefix sums (the paper evaluates each n in O(n), i.e. O(N²)
+  per curve). ``moment_curves_discrete_naive`` is the direct O(N²)/O(N³)
+  transcription used as a test oracle for the prefix-sum indexing.
+
+Key Gamma integrals (mu ~ Gamma(a, b), rate parameterization):
+
+    g(p, t) = E[mu^p e^(-t mu)]        = R(p) b^-p (1 + t/b)^-(a+p)
+    H(p, t) = E[mu^p (1 - e^(-t mu))]  = R(p) b^-p (1 - (1+t/b)^-(a+p))
+    K(p, t) = E[mu^p (1 - e^(-t mu))²] = R(p) b^-p (1 - 2(1+t/b)^-(a+p)
+                                                      + (1+2t/b)^-(a+p))
+    R(p)    = Gamma(a+p)/Gamma(a)
+
+H and K stay valid by analytic continuation for a+p < 0 (the case for the
+fitted Azure priors, where a + nu - 1 = -0.0163): we evaluate them through
+``exp(gammaln(a+p+1) - gammaln(a)) / (a+p)`` and ``expm1`` so the removable
+singularity at a+p = 0 never produces a NaN.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.scipy.special import gammaln
+
+from .belief import GammaBelief
+from .processes import PopulationPriors
+
+_EPS = 1e-12
+
+
+class MomentCurves(NamedTuple):
+    """E and V of L over the horizon grid; shapes [..., N]."""
+
+    EL: jax.Array
+    VL: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Gamma-integral helpers. All take a, b with trailing broadcast vs t.
+# ---------------------------------------------------------------------------
+
+def _g(a, b, p, t):
+    """E[mu^p e^(-t mu)]; requires a + p > 0 (true for p in {0, nu, 2nu})."""
+    logr = gammaln(a + p) - gammaln(a)
+    return jnp.exp(logr - p * jnp.log(b) - (a + p) * jnp.log1p(t / b))
+
+
+def _h(a, b, p, t):
+    """E[mu^p (1 - e^(-t mu))], valid for a + p > -1 (analytic continuation)."""
+    z = a + p
+    z = jnp.where(jnp.abs(z) < _EPS, _EPS, z)
+    logr1 = gammaln(z + 1.0) - gammaln(a)  # log Gamma(a+p+1)/Gamma(a), arg > 0
+    bracket = -jnp.expm1(-z * jnp.log1p(t / b))
+    return jnp.exp(logr1 - p * jnp.log(b)) * bracket / z
+
+
+def _k(a, b, p, t):
+    """E[mu^p (1 - e^(-t mu))²], valid for a + p > -2 if a + 2p' terms converge."""
+    z = a + p
+    z = jnp.where(jnp.abs(z) < _EPS, _EPS, z)
+    logr1 = gammaln(z + 1.0) - gammaln(a)
+    l1 = jnp.log1p(t / b)
+    l2 = jnp.log1p(2.0 * t / b)
+    bracket = -2.0 * jnp.expm1(-z * l1) + jnp.expm1(-z * l2)
+    return jnp.exp(logr1 - p * jnp.log(b)) * bracket / z
+
+
+def _sigma_moments(bel: GammaBelief):
+    """E[sigma+1], E[(sigma+1)^2], E[sigma(sigma+2)] under Gamma(as, bs)."""
+    es = bel.sig_a / bel.sig_b
+    es2 = bel.sig_a * (bel.sig_a + 1.0) / bel.sig_b**2
+    e_s1 = es + 1.0
+    e_s1_sq = es2 + 2.0 * es + 1.0
+    e_ss2 = es2 + 2.0 * es
+    return e_s1, e_s1_sq, e_ss2
+
+
+def _lam_moments(bel: GammaBelief):
+    el = bel.lam_a / bel.lam_b
+    el2 = bel.lam_a * (bel.lam_a + 1.0) / bel.lam_b**2
+    return el, el2
+
+
+def _product_var(ex, vx, ey, vy):
+    """V[XY] for independent X, Y."""
+    return vx * vy + vx * ey**2 + ex**2 * vy
+
+
+# ---------------------------------------------------------------------------
+# D-term: probability the deployment has not hit zero cores (paper Prop. 2).
+#
+# The paper's recursion (16)-(17) multiplies, per step j, the probability that
+# not every core is dead:  1 - (1-P(t_j))^C * prod_{i<j} (1-P(t_j-t_i))^{q_i}
+# with P(t) = E[e^(-t mu)] (Lomax survival) and q_i the expected cores added
+# in window i. On a *uniform* checkpoint grid the elapsed time t_j - t_i
+# depends only on the lag j-i, so the inner product is a single cumulative sum
+# over lags — O(Nd) for the whole curve instead of the paper's O(Nd²).
+# ---------------------------------------------------------------------------
+
+def _d_curve_uniform(a, b, eu, e_mu_nu, cores, w, nd: int, *, midpoint: bool):
+    """E[D] at uniform checkpoints t_j = w*j, j=1..nd. Leading dims broadcast.
+
+    midpoint=False reproduces the paper exactly (windows i < j, elapsed
+    (j-i)*w). midpoint=True also counts the current window at half-window
+    elapsed time — the midpoint-rule variant used by the continuous path so a
+    coarse checkpoint grid does not spuriously kill young deployments.
+    """
+    q = eu * e_mu_nu  # expected cores added per hour
+    lags = jnp.arange(nd, dtype=w.dtype if hasattr(w, "dtype") else jnp.float32)
+    if midpoint:
+        tau = w * (lags + 0.5)              # l = 0..nd-1
+    else:
+        tau = w * (lags + 1.0)              # l = 1..nd-1 used (see shift below)
+    p_lag = jnp.exp(-a[..., None] * jnp.log1p(tau / b[..., None]))
+    s = (q * w)[..., None] * jnp.log1p(-jnp.clip(p_lag, None, 1.0 - 1e-7))
+    cums = jnp.cumsum(s, axis=-1)
+    if midpoint:
+        # sum over lags 0..j-1 -> cums[j-1]
+        window_sum = cums
+    else:
+        # sum over lags 1..j-1 -> shift right by one (0 for j=1)
+        window_sum = jnp.concatenate(
+            [jnp.zeros_like(cums[..., :1]), cums[..., :-1]], axis=-1
+        )
+    tc = w * jnp.arange(1, nd + 1)
+    p_self = jnp.exp(-a[..., None] * jnp.log1p(tc / b[..., None]))
+    log_dead = (
+        cores[..., None] * jnp.log1p(-jnp.clip(p_self, None, 1.0 - 1e-7))
+        + window_sum
+    )
+    factor = -jnp.expm1(log_dead)  # 1 - Pr(all cores dead at t_j)
+    return jnp.cumprod(factor, axis=-1)
+
+
+def _interp_rows(t_full, ts, ys):
+    """Piecewise-linear interp of per-slot curves ys [..., Nd] from grid ts [Nd]
+    (with implicit (0, 1) left anchor) onto t_full [N]."""
+    ts0 = jnp.concatenate([jnp.zeros((1,), ts.dtype), ts])
+    ones = jnp.ones(ys.shape[:-1] + (1,), ys.dtype)
+    ys0 = jnp.concatenate([ones, ys], axis=-1)
+    flat = ys0.reshape((-1, ys0.shape[-1]))
+    out = jax.vmap(lambda row: jnp.interp(t_full, ts0, row))(flat)
+    return out.reshape(ys.shape[:-1] + (t_full.shape[-1],))
+
+
+# ---------------------------------------------------------------------------
+# Continuous-time closed forms (optimized path; DESIGN.md §4).
+# ---------------------------------------------------------------------------
+
+def moment_curves(
+    bel: GammaBelief,
+    cores: jax.Array,
+    t_grid: jax.Array,
+    priors: PopulationPriors,
+    *,
+    d_points: int = 32,
+    d_stride: int | None = None,  # legacy alias: d_points = N // d_stride
+) -> MomentCurves:
+    """E[L_t], V[L_t] at horizon times ``t_grid`` [N] (hours from now).
+
+    ``bel`` fields and ``cores`` share a batch shape [...]; output [..., N].
+    ``d_points``: the D-term (zero-core death) runs on a uniform checkpoint
+    grid of this many points spanning (0, max(t_grid)] and is linearly
+    interpolated onto ``t_grid``.
+    """
+    nu = priors.nu
+    a, b = bel.mu_a[..., None], bel.mu_b[..., None]
+    el, el2 = _lam_moments(bel)
+    e_s1, e_s1_sq, e_ss2 = _sigma_moments(bel)
+    eu = el * e_s1
+    eu2 = el2 * e_s1_sq
+    t = t_grid
+    c = cores[..., None].astype(t_grid.dtype)
+
+    # --- Q: scale-out cores still alive -----------------------------------
+    h1 = _h(a, b, nu - 1.0, t)
+    eq = eu[..., None] * h1
+    evq = el[..., None] * (e_s1[..., None] * h1 + 0.5 * e_ss2[..., None] * _h(a, b, nu - 1.0, 2.0 * t))
+    veq = eu2[..., None] * _k(a, b, 2.0 * nu - 2.0, t) - eq**2
+    vq = evq + jnp.maximum(veq, 0.0)
+
+    # --- B: initial cores still alive --------------------------------------
+    p1 = _g(a, b, 0.0, t)
+    p2 = _g(a, b, 0.0, 2.0 * t)
+    ebn = c * p1
+    vb = c * (p1 - p2) + c**2 * jnp.maximum(p2 - p1**2, 0.0)
+
+    # --- M: max-lifetime survival ------------------------------------------
+    em = jnp.exp(-a * jnp.log1p(priors.delta * t / b))
+    vm = em * (1.0 - em)
+
+    # --- D: zero-core death ------------------------------------------------
+    if d_stride is not None:
+        d_points = max(4, t_grid.shape[-1] // d_stride)
+    e_mu_nu = bel.expected_mu_pow(nu)
+    w = t_grid[-1] / d_points
+    ed_sub = _d_curve_uniform(bel.mu_a, bel.mu_b, eu, e_mu_nu,
+                              cores.astype(t_grid.dtype), w, d_points,
+                              midpoint=True)
+    tc = w * jnp.arange(1, d_points + 1)
+    ed = _interp_rows(t_grid, tc, ed_sub)
+    vd = ed * (1.0 - ed)
+
+    # --- compose L = M * D * (Q + B) ---------------------------------------
+    er = eq + ebn
+    vr = vq + vb
+    edr = ed * er
+    vdr = _product_var(ed, vd, er, vr)
+    elc = em * edr
+    vl = _product_var(em, vm, edr, vdr)
+    return MomentCurves(EL=elc, VL=vl)
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful discrete formulation (Prop. 5 sums via prefix sums).
+# ---------------------------------------------------------------------------
+
+def moment_curves_discrete(
+    bel: GammaBelief,
+    cores: jax.Array,
+    n_steps: int,
+    dt: float,
+    priors: PopulationPriors,
+    **_legacy,
+) -> MomentCurves:
+    """Uniform-grid curves at t = dt*(1..n_steps), per the paper's Prop. 5.
+
+    Scale-outs are Poisson *per step* (count ~ Pois(lam mu^nu dt)); a core
+    added in step i survives to step n w.p. e^(-(n-i) dt mu). All n evaluated
+    simultaneously with prefix sums (O(N) total instead of the paper's O(N²)).
+    """
+    nu = priors.nu
+    a, b = bel.mu_a[..., None], bel.mu_b[..., None]
+    el, el2 = _lam_moments(bel)
+    e_s1, e_s1_sq, e_ss2 = _sigma_moments(bel)
+    eu, eu2 = el * e_s1, el2 * e_s1_sq
+
+    n = n_steps
+    d = jnp.arange(n, dtype=jnp.float32)       # elapsed steps n - i = 0..n-1
+    s = jnp.arange(2 * n - 1, dtype=jnp.float32)
+    g1 = _g(a, b, nu, d * dt)                  # [..., n]
+    g2 = _g(a, b, nu, 2.0 * d * dt)
+    g3 = _g(a, b, 2.0 * nu, s * dt)            # [..., 2n-1]
+
+    cs1 = jnp.cumsum(g1, axis=-1)              # sum_{d=0}^{m} g1
+    cs2 = jnp.cumsum(g2, axis=-1)
+    a3 = jnp.cumsum(g3, axis=-1)
+    b3 = jnp.cumsum(s * g3, axis=-1)
+
+    nn = jnp.arange(1, n + 1, dtype=jnp.float32)
+    i_nm1 = jnp.arange(0, n)                   # index n-1
+    i_2nm2 = jnp.arange(0, 2 * n, 2)           # index 2n-2
+
+    ew = jnp.take(cs1, i_nm1, axis=-1)
+    eq = eu[..., None] * dt * ew
+    evq = el[..., None] * dt * (
+        e_s1[..., None] * jnp.take(cs1, i_nm1, axis=-1)
+        + e_ss2[..., None] * jnp.take(cs2, i_nm1, axis=-1)
+    )
+    # E[W_n^2] = sum_{s=0}^{2n-2} min(s+1, 2n-1-s) g3(s)
+    a_n = jnp.take(a3, i_nm1, axis=-1)
+    b_n = jnp.take(b3, i_nm1, axis=-1)
+    a_2n = jnp.take(a3, i_2nm2, axis=-1)
+    b_2n = jnp.take(b3, i_2nm2, axis=-1)
+    ew2 = (b_n + a_n) + ((2.0 * nn - 1.0) * (a_2n - a_n) - (b_2n - b_n))
+    veq = eu2[..., None] * dt**2 * ew2 - (eu[..., None] * dt * ew) ** 2
+    vq = evq + jnp.maximum(veq, 0.0)
+
+    t = nn * dt
+    c = cores[..., None].astype(jnp.float32)
+    p1 = _g(a, b, 0.0, t)
+    p2 = _g(a, b, 0.0, 2.0 * t)
+    ebn = c * p1
+    vb = c * (p1 - p2) + c**2 * jnp.maximum(p2 - p1**2, 0.0)
+    em = jnp.exp(-a * jnp.log1p(priors.delta * t / b))
+    vm = em * (1.0 - em)
+
+    # Paper-exact D recursion on the uniform step grid (lag-cumsum, O(N)).
+    e_mu_nu = bel.expected_mu_pow(nu)
+    ed = _d_curve_uniform(bel.mu_a, bel.mu_b, eu, e_mu_nu,
+                          cores.astype(jnp.float32), jnp.float32(dt), n,
+                          midpoint=False)
+    vd = ed * (1.0 - ed)
+
+    er = eq + ebn
+    vr = vq + vb
+    edr = ed * er
+    vdr = _product_var(ed, vd, er, vr)
+    elc = em * edr
+    vl = _product_var(em, vm, edr, vdr)
+    return MomentCurves(EL=elc, VL=vl)
+
+
+def moment_curves_discrete_naive(
+    bel_np, cores, n_steps: int, dt: float, priors: PopulationPriors
+) -> MomentCurves:
+    """Direct O(N²) numpy transcription of the discrete sums — test oracle.
+
+    ``bel_np``: GammaBelief of scalar floats; ``cores``: scalar.
+    """
+    from math import lgamma
+
+    a, b = float(bel_np.mu_a), float(bel_np.mu_b)
+    al, bl = float(bel_np.lam_a), float(bel_np.lam_b)
+    asg, bsg = float(bel_np.sig_a), float(bel_np.sig_b)
+    nu, delta = priors.nu, priors.delta
+
+    def g(p, tau):
+        return np.exp(lgamma(a + p) - lgamma(a) - p * np.log(b) - (a + p) * np.log1p(tau / b))
+
+    el = al / bl
+    el2 = al * (al + 1) / bl**2
+    es = asg / bsg
+    es2 = asg * (asg + 1) / bsg**2
+    e_s1, e_s1_sq, e_ss2 = es + 1, es2 + 2 * es + 1, es2 + 2 * es
+    eu, eu2 = el * e_s1, el2 * e_s1_sq
+    e_mu_nu = g(nu, 0.0)
+
+    n_arr = np.arange(1, n_steps + 1)
+    eq = np.zeros(n_steps); vq = np.zeros(n_steps)
+    ebv = np.zeros(n_steps); vb = np.zeros(n_steps)
+    em = np.zeros(n_steps); ed = np.zeros(n_steps)
+    for ni, n in enumerate(n_arr):
+        ew = sum(g(nu, (n - i) * dt) for i in range(1, n + 1))
+        eq[ni] = eu * dt * ew
+        evq = el * dt * sum(
+            e_s1 * g(nu, (n - i) * dt) + e_ss2 * g(nu, 2 * (n - i) * dt)
+            for i in range(1, n + 1)
+        )
+        ew2 = sum(
+            g(2 * nu, (2 * n - i - j) * dt)
+            for i in range(1, n + 1) for j in range(1, n + 1)
+        )
+        veq = eu2 * dt**2 * ew2 - (eu * dt * ew) ** 2
+        vq[ni] = evq + max(veq, 0.0)
+        t = n * dt
+        p1, p2 = g(0.0, t), g(0.0, 2 * t)
+        ebv[ni] = cores * p1
+        vb[ni] = cores * (p1 - p2) + cores**2 * max(p2 - p1**2, 0.0)
+        em[ni] = np.exp(-a * np.log1p(delta * t / b))
+
+    # D recursion, paper (16)-(17) on the uniform grid
+    ed_prev = 1.0
+    q_step = eu * e_mu_nu * dt
+    for ni, n in enumerate(n_arr):
+        p_self = g(0.0, n * dt)
+        log_dead = cores * np.log1p(-min(p_self, 1 - 1e-7))
+        for i in range(1, n):
+            pij = g(0.0, (n - i) * dt)
+            log_dead += q_step * np.log1p(-min(pij, 1 - 1e-7))
+        factor = -np.expm1(log_dead)
+        ed[ni] = (ed_prev if ni else 1.0) * factor
+        ed_prev = ed[ni]
+
+    vm = em * (1 - em)
+    vd = ed * (1 - ed)
+    er, vr = eq + ebv, vq + vb
+    edr = ed * er
+    vdr = vd * vr + vd * er**2 + ed**2 * vr
+    elc = em * edr
+    vl = vm * vdr + vm * edr**2 + em**2 * vdr
+    return MomentCurves(EL=elc, VL=vl)

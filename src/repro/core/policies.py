@@ -1,0 +1,161 @@
+"""Admission policies (paper §4): zeroth / first / second moment (+ marginal).
+
+All policies are expressed over *aggregate* moment curves of the cluster
+(sum over admitted deployments of E[L_n] and V[L_n]) plus the candidate's own
+curves, so a decision is O(N) on the horizon grid:
+
+  * Zeroth (Def. 1, industry baseline): admit iff util_after < t.
+  * First (Def. 2, Markov's inequality):  admit iff sum E[L_n] <= t  for all n.
+  * Second (Def. 3, Cantelli):            admit iff sum E[L_n] <= c  and
+        sum V[L_n] / (sum V[L_n] + (c - sum E[L_n])²) <= rho  for all n.
+  * Marginal heuristic (Def. 4): per-n OR with E[L_n^cand] < eps (1e-5).
+
+Batched arrivals within one simulator step are admitted greedily in arrival
+order via ``admit_sequential`` (a lax.scan that folds accepted candidates'
+curves into the running aggregate), matching the paper's one-at-a-time
+semantics under Assumption 3.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .moments import MomentCurves
+
+ZEROTH, FIRST, SECOND = 0, 1, 2
+
+
+class PolicyParams(NamedTuple):
+    """Runtime parameters of an admission policy (jit-friendly)."""
+
+    kind: jax.Array          # int32: ZEROTH / FIRST / SECOND
+    threshold: jax.Array     # t  (zeroth/first)  -- cores
+    rho: jax.Array           # Cantelli bound     (second)
+    capacity: jax.Array      # c  -- cluster cores
+    marginal_eps: jax.Array  # 0.0 disables Def. 4
+
+
+def make_policy(kind: int, *, threshold: float = 0.0, rho: float = 0.0,
+                capacity: float, marginal: bool = False) -> PolicyParams:
+    return PolicyParams(
+        kind=jnp.asarray(kind, jnp.int32),
+        threshold=jnp.asarray(threshold, jnp.float32),
+        rho=jnp.asarray(rho, jnp.float32),
+        capacity=jnp.asarray(capacity, jnp.float32),
+        marginal_eps=jnp.asarray(1e-5 if marginal else 0.0, jnp.float32),
+    )
+
+
+def geometric_grid(t_min: float = 1.0, t_max: float = 3 * 365 * 24.0, n: int = 48):
+    """Geometric horizon grid (hours). Beyond-paper: replaces the 5-subpolicy
+    cascade with one log-spaced grid covering 1h..3y."""
+    return jnp.asarray(
+        jnp.exp(jnp.linspace(math.log(t_min), math.log(t_max), n)), jnp.float32
+    )
+
+
+def paper_cascade(n_per: int = 600) -> jax.Array:
+    """The paper's §5.2 subpolicy cascade: 24h / 1w / 1mo / 1y / 3y horizons,
+    each discretized into ``n_per`` uniform steps; returned as one sorted grid
+    (accept iff the condition holds at every point = all subpolicies accept)."""
+    horizons = [24.0, 7 * 24.0, 30 * 24.0, 365 * 24.0, 3 * 365 * 24.0]
+    grids = [jnp.linspace(h / n_per, h, n_per) for h in horizons]
+    return jnp.unique(jnp.concatenate(grids))
+
+
+# ---------------------------------------------------------------------------
+# Decision rules. agg_el/agg_vl: [N] aggregate curves of already-admitted
+# deployments; cand: the candidate's curves [N]; util: current active cores.
+# ---------------------------------------------------------------------------
+
+def decide(params: PolicyParams, agg_el: jax.Array, agg_vl: jax.Array,
+           util: jax.Array, cand: MomentCurves, cand_c0: jax.Array) -> jax.Array:
+    """Boolean admission decision for a single candidate."""
+    el_after = agg_el + cand.EL
+    vl_after = agg_vl + cand.VL
+    fits = util + cand_c0 <= params.capacity  # physical: the request must fit
+
+    zeroth_ok = util + cand_c0 < params.threshold
+
+    first_pt = el_after <= params.threshold
+    slack = jnp.maximum(params.capacity - el_after, 0.0)
+    cantelli = vl_after / (vl_after + slack**2 + 1e-30)
+    second_pt = (el_after <= params.capacity) & (cantelli <= params.rho)
+
+    marginal_pt = cand.EL < params.marginal_eps  # Def. 4, per horizon point
+    first_ok = jnp.all(first_pt | marginal_pt)
+    second_ok = jnp.all(second_pt | marginal_pt)
+
+    ok = jnp.where(
+        params.kind == ZEROTH, zeroth_ok,
+        jnp.where(params.kind == FIRST, first_ok, second_ok),
+    )
+    return ok & fits
+
+
+def is_safe(params: PolicyParams, agg_el: jax.Array, agg_vl: jax.Array) -> jax.Array:
+    """Problem 1 safety check: does the reject-all policy satisfy the
+    constraint from the current belief state? (Equation (4), evaluated through
+    the same moment approximation the policy uses.)"""
+    slack = jnp.maximum(params.capacity - agg_el, 0.0)
+    cantelli = agg_vl / (agg_vl + slack**2 + 1e-30)
+    first_safe = jnp.all(agg_el <= params.threshold)
+    second_safe = jnp.all((agg_el <= params.capacity) & (cantelli <= params.rho))
+    return jnp.where(params.kind == FIRST, first_safe,
+                     jnp.where(params.kind == SECOND, second_safe, True))
+
+
+class AdmitResult(NamedTuple):
+    accept: jax.Array   # [A] bool
+    agg_el: jax.Array   # [N] updated aggregate
+    agg_vl: jax.Array   # [N]
+    util: jax.Array     # scalar
+
+
+def admit_sequential(params: PolicyParams, agg_el: jax.Array, agg_vl: jax.Array,
+                     util: jax.Array, cands: MomentCurves, cand_c0: jax.Array,
+                     valid: jax.Array) -> AdmitResult:
+    """Greedy first-come-first-served admission of a batch of A candidates.
+
+    cands.EL/VL: [A, N]; cand_c0, valid: [A]. Invalid slots are skipped.
+    """
+
+    def step(carry, x):
+        el, vl, u = carry
+        c_el, c_vl, c0, ok_slot = x
+        acc = decide(params, el, vl, u, MomentCurves(c_el, c_vl), c0) & ok_slot
+        el = jnp.where(acc, el + c_el, el)
+        vl = jnp.where(acc, vl + c_vl, vl)
+        u = jnp.where(acc, u + c0, u)
+        return (el, vl, u), acc
+
+    (agg_el, agg_vl, util), accept = jax.lax.scan(
+        step, (agg_el, agg_vl, util), (cands.EL, cands.VL, cand_c0, valid)
+    )
+    return AdmitResult(accept, agg_el, agg_vl, util)
+
+
+# ---------------------------------------------------------------------------
+# Threshold calibration (paper §5.2: binary search subject to the SLA).
+# ---------------------------------------------------------------------------
+
+def tune_threshold(
+    run_sla: Callable[[float], float],
+    lo: float,
+    hi: float,
+    target_sla: float,
+    iters: int = 12,
+) -> float:
+    """Binary-search the policy parameter so the measured SLA failure rate is
+    just below ``target_sla``. ``run_sla(theta)`` returns the failure rate of a
+    simulation batch at parameter theta (monotone increasing in theta)."""
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if run_sla(mid) <= target_sla:
+            lo = mid
+        else:
+            hi = mid
+    return lo

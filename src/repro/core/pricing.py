@@ -1,0 +1,52 @@
+"""Variance-based pricing & information elicitation (paper §7).
+
+The payment rule q(x) = kappa1 * C^x + kappa2 * Var(x) makes labeling
+deployment types a dominant strategy (Prop. 4 / Cor. 2, via the law of total
+variance): a mixture of two types always has at least the mixture-weighted
+variance of its components, so a user minimizes the variance charge by
+splitting the mixture into labeled categories.
+
+``mixture_moments`` implements the provider's belief over an *unlabeled*
+arrival (a type mixture) and is the exact law-of-total-variance computation
+the proposition rests on — reused by the Fig. 2 benchmark and tested directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .moments import MomentCurves
+
+
+def payment(c0: jax.Array, var_estimate: jax.Array,
+            kappa1: float = 1.0, kappa2: float = 0.01) -> jax.Array:
+    """Hourly variance-based payment rule, Eq. (30)."""
+    return kappa1 * c0 + kappa2 * var_estimate
+
+
+def variance_estimate(curves: MomentCurves) -> jax.Array:
+    """Provider's scalar Var(x) estimate for pricing: the peak of the
+    posterior-predictive variance curve over the horizon."""
+    return jnp.max(curves.VL, axis=-1)
+
+
+def mixture_moments(weights: jax.Array, curves: MomentCurves) -> MomentCurves:
+    """Moments of a mixture over K type-components (law of total variance).
+
+    weights: [K]; curves.EL/VL: [K, ..., N]. Returns the mixture's curves:
+      E = sum_k w_k E_k
+      V = sum_k w_k (V_k + E_k^2) - E^2   (= E[V|type] + V[E|type])
+    """
+    w = weights.reshape((-1,) + (1,) * (curves.EL.ndim - 1))
+    e = jnp.sum(w * curves.EL, axis=0)
+    second = jnp.sum(w * (curves.VL + curves.EL**2), axis=0)
+    return MomentCurves(EL=e, VL=jnp.maximum(second - e**2, 0.0))
+
+
+def mixture_variance_excess(weights: jax.Array, e_components: jax.Array,
+                            v_components: jax.Array) -> jax.Array:
+    """Var(mixture) - sum_k w_k Var(component_k) = Var_k(E[.|k]) >= 0 —
+    the quantity Prop. 4 shows is nonnegative (the user's saving from labeling).
+    """
+    e_mix = jnp.sum(weights * e_components, axis=0)
+    return jnp.sum(weights * (e_components - e_mix) ** 2, axis=0)

@@ -1,0 +1,154 @@
+"""Deployment stochastic processes (paper §2.1) and the fitted Azure priors.
+
+A deployment x is described by latent parameters (lam, mu, sig):
+  * core lifetime            ~ Exp(mu)               (rate, per hour)
+  * max deployment lifetime  ~ Exp(delta * mu)       (spontaneous shutdown)
+  * scale-out events         ~ Poisson(lam * mu**nu) (per hour)
+  * scale-out size           ~ 1 + Poisson(sig)
+  * initial size C0          ~ 1 + Poisson(sig)      (the arrival request)
+
+Population priors are Gamma(shape, rate) fitted to the Azure trace of
+Cortez et al. [2017] (paper Table 1). ``delta`` and ``nu`` are population-wide
+constants. Time unit throughout the package: one hour.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PopulationPriors(NamedTuple):
+    """Gamma(shape, rate) hyperparameters for (mu, lam, sig) + global constants."""
+
+    mu_shape: float
+    mu_rate: float
+    lam_shape: float
+    lam_rate: float
+    sig_shape: float
+    sig_rate: float
+    delta: float  # max-lifetime rate multiplier
+    nu: float     # scale-out-rate power-law exponent
+
+
+#: Paper Table 1 — fitted to the Azure internal-jobs trace.
+AZURE_PRIORS = PopulationPriors(
+    mu_shape=0.3107, mu_rate=0.5778,
+    lam_shape=0.4907, lam_rate=0.4496,
+    sig_shape=0.2616, sig_rate=0.0552,
+    delta=0.119, nu=0.673,
+)
+
+
+class DeploymentParams(NamedTuple):
+    """True latent parameters of a batch of deployments. All fields [...]-shaped."""
+
+    lam: jax.Array
+    mu: jax.Array
+    sig: jax.Array
+
+    @property
+    def scaleout_rate(self) -> jax.Array:
+        """Poisson rate of scale-out events per hour (lam * mu**nu needs nu)."""
+        raise AttributeError("use scaleout_rate(params, priors)")
+
+
+def scaleout_rate(params: DeploymentParams, priors: PopulationPriors) -> jax.Array:
+    """Scale-out events per hour: lam * mu**nu (paper §2.1)."""
+    return params.lam * params.mu ** priors.nu
+
+
+def sample_params(key: jax.Array, priors: PopulationPriors, shape=()) -> DeploymentParams:
+    """Draw deployment parameters from the population priors.
+
+    jax.random.gamma samples with unit rate; divide by the rate parameter.
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    lam = jax.random.gamma(k1, priors.lam_shape, shape) / priors.lam_rate
+    mu = jax.random.gamma(k2, priors.mu_shape, shape) / priors.mu_rate
+    sig = jax.random.gamma(k3, priors.sig_shape, shape) / priors.sig_rate
+    return DeploymentParams(lam=lam, mu=mu, sig=sig)
+
+
+def sample_initial_size(key: jax.Array, params: DeploymentParams) -> jax.Array:
+    """Initial core count C0 ~ 1 + Poisson(sig)."""
+    return 1 + jax.random.poisson(key, params.sig)
+
+
+def sample_scaleout_size(key: jax.Array, params: DeploymentParams) -> jax.Array:
+    """Scale-out size ~ 1 + Poisson(sig)."""
+    return 1 + jax.random.poisson(key, params.sig)
+
+
+class StepEvents(NamedTuple):
+    """Events for one discretized step of length dt hours (per deployment)."""
+
+    core_deaths: jax.Array     # cores shut down this step
+    spont_death: jax.Array     # bool: deployment spontaneously shut down
+    n_scaleouts: jax.Array     # number of scale-out requests
+    scaleout_cores: jax.Array  # total cores requested across those scale-outs
+
+
+def sample_step_events(
+    key: jax.Array,
+    params: DeploymentParams,
+    cores: jax.Array,
+    priors: PopulationPriors,
+    dt: float,
+) -> StepEvents:
+    """Sample one simulator step of the memoryless processes.
+
+    * each active core dies w.p. 1 - exp(-mu*dt)            (exact thinning)
+    * spontaneous death w.p.   1 - exp(-delta*mu*dt)        (memoryless => exact)
+    * scale-outs ~ Poisson(lam * mu**nu * dt); total size = k + Poisson(k*sig)
+      (a sum of k iid (1 + Poisson(sig)) draws).
+    """
+    kd, ks, ko, kz = jax.random.split(key, 4)
+    p_die = -jnp.expm1(-params.mu * dt)
+    core_deaths = jax.random.binomial(kd, cores.astype(jnp.float32), p_die).astype(cores.dtype)
+    spont_death = jax.random.bernoulli(ks, -jnp.expm1(-priors.delta * params.mu * dt))
+    n_scaleouts = jax.random.poisson(ko, scaleout_rate(params, priors) * dt)
+    extra = jax.random.poisson(kz, n_scaleouts * params.sig)
+    scaleout_cores = n_scaleouts + extra
+    return StepEvents(core_deaths, spont_death, n_scaleouts, scaleout_cores)
+
+
+class PseudoObservations(NamedTuple):
+    """k observations of each true scaling process (paper §6 "pseudo observations")."""
+
+    n_lifetimes: jax.Array       # number of observed core lifetimes (== k)
+    sum_lifetimes: jax.Array     # total observed lifetime hours
+    n_windows: jax.Array         # unit-time windows observed for scale-outs (== k)
+    n_scaleouts: jax.Array       # scale-outs observed in those windows
+    n_sizes: jax.Array           # scale-out size observations
+    sum_size_minus1: jax.Array   # sum of (size - 1)
+
+
+def sample_pseudo_observations(
+    key: jax.Array, params: DeploymentParams, priors: PopulationPriors, k: int
+) -> PseudoObservations:
+    """Draw k observations from each true process of each deployment.
+
+    Matches the paper's "pseudo observation" interpretation of conjugate-prior
+    posteriors: k exponential core lifetimes, k unit-window Poisson scale-out
+    counts, and k scale-out sizes. ``params`` fields are [...]-shaped; outputs
+    share that batch shape. k == 0 yields the uninformative update.
+    """
+    shape = params.mu.shape
+    if k == 0:
+        z = jnp.zeros(shape)
+        return PseudoObservations(z, z, z, z, z, z)
+    k1, k2, k3 = jax.random.split(key, 3)
+    life = jax.random.exponential(k1, (k, *shape)) / params.mu
+    counts = jax.random.poisson(k2, jnp.broadcast_to(scaleout_rate(params, priors), (k, *shape)))
+    sizes_m1 = jax.random.poisson(k3, jnp.broadcast_to(params.sig, (k, *shape)))
+    kf = jnp.full(shape, float(k))
+    return PseudoObservations(
+        n_lifetimes=kf,
+        sum_lifetimes=life.sum(0),
+        n_windows=kf,
+        n_scaleouts=counts.sum(0).astype(jnp.float32),
+        n_sizes=kf,
+        sum_size_minus1=sizes_m1.sum(0).astype(jnp.float32),
+    )

@@ -1,0 +1,30 @@
+"""jit wrapper for decode_gqa: layout conversion + seq padding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BK, decode_gqa_grouped
+
+
+def decode_gqa(q: jax.Array, k: jax.Array, v: jax.Array, length,
+               *, interpret: bool | None = None) -> jax.Array:
+    """q: [B, H, Dh]; k/v: [B, S, KVH, Dh]; length: scalar or [B].
+    Returns [B, H, Dh] f32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, dh = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    bk = min(DEFAULT_BK, max(128, 1 << (s - 1).bit_length()))
+    bk = min(bk, DEFAULT_BK)
+    pad = (-s) % bk
+    kt = jnp.moveaxis(k, 2, 1)   # [B, KVH, S, Dh]
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    qg = q.reshape(b, kvh, g, dh)
+    lengths = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    out = decode_gqa_grouped(qg, kt, vt, lengths, bk=bk, interpret=interpret)
+    return out.reshape(b, h, dh)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_gqa_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                   length: jax.Array) -> jax.Array:
+    """q: [B, H, Dh]; k/v: [B, S, KVH, Dh]; length: scalar or [B] valid keys.
+    Returns [B, H, Dh] (f32)."""
+    b, h, dh = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, dh)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(dh)
+    length = jnp.broadcast_to(jnp.asarray(length), (b,))
+    valid = jnp.arange(s)[None, :] < length[:, None]       # [B, S]
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, dh)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the moment_curves kernel = core.moments.moment_curves.
+
+The kernel computes the same continuous-time closed forms; this module just
+re-exports the reference entry point with the kernel's packed-input calling
+convention so tests compare apples to apples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.belief import GammaBelief
+from ...core.moments import moment_curves
+from ...core.processes import PopulationPriors
+
+
+def moment_curves_ref(bel: GammaBelief, cores: jax.Array, t_grid: jax.Array,
+                      priors: PopulationPriors, d_points: int = 32):
+    return moment_curves(bel, cores, t_grid, priors, d_points=d_points)

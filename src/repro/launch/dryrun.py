@@ -1,0 +1,354 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves the sharding config is coherent end-to-end:
+  * jit(step).lower(**ShapeDtypeStruct inputs) succeeds (no allocation),
+  * .compile() succeeds under GSPMD on the production mesh,
+  * memory_analysis() shows the per-device footprint,
+  * cost_analysis() + a collective parse of the partitioned HLO feed the
+    roofline table (benchmarks/roofline.py reads the JSON artifacts).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+"""
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.shapes import SHAPES, applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, get_config, input_specs
+from repro.models.registry import ARCH_NAMES
+from repro.models.spec import resolve_spec
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import (abstract_train_state, batch_shardings,
+                              make_train_step, state_shardings)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+#: per-arch gradient-accumulation microbatches for train_4k (memory fit);
+#: revisited during §Perf iteration.
+TRAIN_MICROBATCHES = {
+    "dbrx-132b": 8, "chameleon-34b": 8, "granite-20b": 4, "qwen3-14b": 4,
+    "moonshot-v1-16b-a3b": 4, "starcoder2-3b": 2, "hymba-1.5b": 2,
+    "llama3.2-1b": 2, "xlstm-125m": 1, "whisper-small": 1,
+}
+
+#: §Perf optimization variants (EXPERIMENTS.md hypothesis->change->measure):
+#:   opt = chunked flash-style attention (kills S² logits memory) +
+#:         shard_map local-dispatch MoE (kills data-axis dispatch gathers)
+VARIANTS = {
+    "baseline": {},
+    "opt": {"attn_chunk": 512, "moe_local_dispatch": True},
+    "opt_chunk_only": {"attn_chunk": 512},
+    "opt_moe_only": {"moe_local_dispatch": True},
+    "opt_chunk256": {"attn_chunk": 256, "moe_local_dispatch": True},
+    "opt_chunk1024": {"attn_chunk": 1024, "moe_local_dispatch": True},
+    # serving variant: bf16 params replicated over the data axes (EP/TP only)
+    # so decode pays no per-step FSDP weight gathers; wider MoE capacity.
+    "opt_serve": {"attn_chunk": 512, "moe_local_dispatch": True,
+                  "moe_capacity_factor": 4.0,
+                  "_serve_params": True},
+}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type, e.g. 'f32[8,128]{1,0}' or a tuple."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [num_groups, group_size]
+        return int(m.group(2))
+    return n_devices
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> dict:
+    """Per-chip wire-byte cost model over the partitioned module.
+
+    ring costs: all-reduce 2X(g-1)/g; all-gather/reduce-scatter/all-to-all
+    X(g-1)/g (X = full logical bytes touched per chip); permute X.
+    """
+    out = {k: {"count": 0, "wire_bytes": 0.0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (\(?.+?\)?) (all-reduce|all-gather|"
+                     r"reduce-scatter|all-to-all|collective-permute)", ls)
+        if not m:
+            continue
+        kind = m.group(2)
+        if f" {kind}(" not in ls and f"{kind}-start(" not in ls:
+            # avoid matching fusions mentioning the name
+            pass
+        rb = _shape_bytes(m.group(1))
+        g = _group_size(ls, n_devices)
+        if kind == "all-reduce":
+            wire = 2.0 * rb * (g - 1) / max(g, 1)
+        elif kind == "all-gather":
+            wire = rb * (g - 1) / max(g, 1)
+        elif kind == "reduce-scatter":
+            wire = rb * (g - 1)          # result is the scattered shard
+        elif kind == "all-to-all":
+            wire = rb * (g - 1) / max(g, 1)
+        else:
+            wire = float(rb)
+        out[kind]["count"] += 1
+        out[kind]["wire_bytes"] += wire
+    out["total_wire_bytes"] = sum(
+        v["wire_bytes"] for k, v in out.items() if isinstance(v, dict))
+    return out
+
+
+def _mem_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or k in ("transcendentals",))}
+
+
+def _lower_for(cfg, model, shape, mesh, microbatches: int):
+    """Build the lowered computation for one cell (no compile)."""
+    specs = input_specs(cfg, shape)
+    if shape.kind == "train":
+        mb = microbatches
+        state = abstract_train_state(model)
+        st_sh = state_shardings(model, mesh)
+        b_sh = batch_shardings(specs, mesh)
+        step = make_train_step(model, AdamWConfig(), mesh, microbatches=mb)
+        fn = jax.jit(step, in_shardings=(st_sh, b_sh),
+                     out_shardings=(st_sh, None), donate_argnums=(0,))
+        lowered = fn.lower(state, specs)
+    elif shape.kind == "prefill":
+        p_abs = model.abstract_params()
+        p_sh = model.param_shardings(mesh)
+        tok_sh = NamedSharding(mesh, resolve_spec(
+            specs["tokens"].shape, ("batch", None), mesh))
+        args_sh = {"tokens": tok_sh}
+        if "frames" in specs:
+            args_sh["frames"] = NamedSharding(mesh, resolve_spec(
+                specs["frames"].shape, ("batch", None, None), mesh))
+
+        if cfg.family == "audio":
+            def prefill_fn(params, tokens, frames):
+                return model.prefill(params, tokens, mesh, frames=frames)
+            fn = jax.jit(prefill_fn,
+                         in_shardings=(p_sh, args_sh["tokens"], args_sh["frames"]))
+            lowered = fn.lower(p_abs, specs["tokens"], specs["frames"])
+        else:
+            def prefill_fn(params, tokens):
+                return model.prefill(params, tokens, mesh)
+            fn = jax.jit(prefill_fn, in_shardings=(p_sh, args_sh["tokens"]))
+            lowered = fn.lower(p_abs, specs["tokens"])
+    else:  # decode
+        b, s = shape.global_batch, shape.seq_len
+        serve = getattr(model, "_serve_params", False)
+        p_abs = model.abstract_params(jnp.bfloat16 if serve else jnp.float32)
+        p_sh = model.param_shardings(mesh,
+                                     drop_axes=("embed",) if serve else ())
+        cache_abs = jax.eval_shape(
+            functools.partial(model.init_cache, b, s, jnp.bfloat16))
+        c_sh = model.cache_shardings(mesh, b, s)
+        tok_sh = NamedSharding(mesh, resolve_spec((b,), ("batch",), mesh))
+
+        def decode_fn(params, tokens, cache):
+            return model.decode_step(params, tokens, cache, mesh)
+
+        fn = jax.jit(decode_fn, in_shardings=(p_sh, tok_sh, c_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(2,))
+        lowered = fn.lower(p_abs, specs["tokens"], cache_abs)
+    return lowered
+
+
+def _probe_metrics(compiled, n_dev) -> dict:
+    cost = _cost_dict(compiled)
+    coll = parse_collectives(compiled.as_text(), n_dev)
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        "transcendentals": cost.get("transcendentals", 0.0),
+        "wire_bytes": coll["total_wire_bytes"],
+    }
+
+
+def extrapolate_depth(cfg, model, shape, mesh) -> dict:  # noqa: C901
+    """XLA cost analysis counts while-loop (scan) bodies ONCE. Compile
+    unrolled depth-k and depth-2k probes and extrapolate linearly to the true
+    depth: m(L) = m(k) + (L-k)/k * (m(2k) - m(k)). Fixes flops, bytes and
+    collective counts for the scanned-layer (and grad-accum) loops. Known
+    caveat (DESIGN.md): inner *sequence* scans (SSD chunk loops, sLSTM time
+    loop) are still body-once; their contribution is bounded analytically in
+    benchmarks/roofline.py.
+    """
+    import dataclasses as dc
+
+    k = 2 if cfg.family == "ssm" else 1  # ssm alternates mlstm/slstm blocks
+    n_dev = mesh.devices.size
+    out = {}
+    for depth in (k, 2 * k):
+        c = dc.replace(cfg, n_layers=depth, scan_layers=False,
+                       enc_layers=depth if cfg.enc_layers else 0)
+        m = build_model(c)
+        m._serve_params = getattr(model, "_serve_params", False)
+        lowered = _lower_for(c, m, shape, mesh, microbatches=1)
+        out[depth] = _probe_metrics(lowered.compile(), n_dev)
+    el = cfg.n_layers
+    extrap = {
+        key: out[k][key] + (el - k) / k * (out[2 * k][key] - out[k][key])
+        for key in out[k]
+    }
+    extrap["probe_depths"] = [k, 2 * k]
+    extrap["probe_metrics"] = {str(d): out[d] for d in out}
+    return extrap
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
+               probes: bool = True, variant: str = "baseline") -> dict:
+    import dataclasses as dc
+    overrides = dict(VARIANTS[variant])
+    serve_params = overrides.pop("_serve_params", False)
+    cfg = dc.replace(get_config(arch), **overrides)
+    model = build_model(cfg)
+    model._serve_params = serve_params
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": reason}
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    mb = TRAIN_MICROBATCHES.get(arch, 1) if shape.kind == "train" else 1
+    lowered = _lower_for(cfg, model, shape, mesh, microbatches=mb)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = _mem_dict(compiled)
+    cost = _cost_dict(compiled)
+    coll = parse_collectives(compiled.as_text(), n_dev)
+    extrap = extrapolate_depth(cfg, model, shape, mesh) if probes else {}
+    extrap["variant"] = variant
+    result = {
+        "variant": variant,
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "mesh": list(mesh.devices.shape), "axis_names": list(mesh.axis_names),
+        "n_devices": int(n_dev),
+        "n_params": model.n_params(),
+        "n_active_params": model.n_active_params(),
+        "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "microbatches": mb,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem, "cost": cost, "collectives": coll,
+        "extrapolated": extrap,
+    }
+    if verbose:
+        flops = cost.get("flops", 0)
+        print(f"  {arch} × {shape_name} [{'x'.join(map(str, mesh.devices.shape))}]"
+              f" OK lower={t_lower:.1f}s compile={t_compile:.1f}s"
+              f" flops/dev={flops:.3g}"
+              f" temp/dev={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB"
+              f" wire/dev={coll['total_wire_bytes']/2**30:.3f}GiB")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(("single_pod", make_production_mesh(multi_pod=False)))
+    if not args.single_pod_only:
+        meshes.append(("multi_pod", make_production_mesh(multi_pod=True)))
+
+    archs = [args.arch] if args.arch else list(ARCH_NAMES)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    suffix = "" if args.variant == "baseline" else f"_{args.variant}"
+    failures = 0
+    for mesh_name, mesh in meshes:
+        print(f"=== mesh {mesh_name} {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+        for arch in archs:
+            for shape in shapes:
+                out_path = os.path.join(
+                    args.out, f"{arch}_{shape}_{mesh_name}{suffix}.json")
+                try:
+                    res = lower_cell(arch, shape, mesh,
+                                     variant=args.variant)
+                except Exception as e:
+                    failures += 1
+                    res = {"arch": arch, "shape": shape, "status": "error",
+                           "mesh": mesh_name, "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"  {arch} × {shape} [{mesh_name}] FAILED: {e}")
+                with open(out_path, "w") as f:
+                    json.dump(res, f, indent=1)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

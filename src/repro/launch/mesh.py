@@ -1,0 +1,32 @@
+"""Production mesh construction (TPU v5e pods).
+
+Single pod: 256 chips as (data=16, model=16). Multi-pod: 2 pods = 512 chips
+as (pod=2, data=16, model=16) — the leading 'pod' axis carries pure data
+parallelism across the inter-pod DCN/ICI links (cheapest collective), while
+'model' (tensor/expert parallel, all-reduce heavy) stays inside a pod's dense
+ICI torus.
+
+Functions only — importing this module never touches jax device state (the
+dry-run must set XLA_FLAGS before any jax initialization).
+
+XLA flags for real runs (documented here, applied by launch/train.py):
+  --xla_tpu_enable_latency_hiding_scheduler=true   # overlap collectives
+  --xla_tpu_enable_async_collective_permute=true
+  --xla_tpu_spmd_rng_bit_generator_unsafe=true     # cheap dropout RNG
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever this host has (1 CPU device in the container) — used by smoke
+    tests and examples; same axis names so sharding rules still resolve."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,8 @@
+"""Model substrate: the 10 assigned architectures behind one registry."""
+from .lm import DecoderLM, ModelConfig
+from .encdec import EncDecLM
+from .registry import (ARCH_NAMES, build_model, get_config, input_specs,
+                       reduced_config)
+
+__all__ = ["DecoderLM", "EncDecLM", "ModelConfig", "ARCH_NAMES",
+           "build_model", "get_config", "input_specs", "reduced_config"]

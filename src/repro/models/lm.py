@@ -1,0 +1,468 @@
+"""Unified decoder-only LM covering the dense / moe / hybrid / ssm / vlm
+families. One scanned block body per architecture (homogeneous stacks scan for
+O(1)-in-depth HLO and compile time; heterogeneous stacks — xLSTM — unroll).
+
+Block structure by family:
+  dense/vlm : x += attn(ln1 x);             x += mlp(ln2 x)
+  moe       : x += attn(ln1 x);             x += moe(ln2 x)
+  hybrid    : x += attn(ln1 x) + ssm(ln1 x) x += mlp(ln2 x)   (hymba parallel)
+  ssm       : x += mlstm(ln1 x) | slstm(ln1 x)                (no FFN, d_ff=0)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from . import xlstm as xlstm_lib
+from .layers import (AttnConfig, KVCache, attention, attention_decode,
+                     attention_params, init_kv_cache, mlp, mlp_params,
+                     rmsnorm, rmsnorm_params)
+from .spec import (P, abstract_params, count_params, init_params,
+                   logical_constraint, param_shardings, param_specs)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    window: int = 0             # sliding-window attention (hybrid)
+    gated_mlp: bool = True
+    n_experts: int = 0
+    moe_top_k: int = 0
+    moe_aux_coef: float = 0.01
+    moe_capacity_factor: float = 1.25
+    ssm_state: int = 0
+    enc_layers: int = 0         # audio (whisper) encoder depth
+    enc_seq: int = 1500         # audio frames after the (stubbed) frontend
+    scan_layers: bool = True
+    remat: bool = True
+    attn_chunk: int = 0         # chunked flash-style attention block (0 = off)
+    moe_local_dispatch: bool = False  # shard_map'd EP dispatch (§Perf)
+    dtype: Any = jnp.bfloat16   # activation/compute dtype
+    use_flash_kernel: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can serve arbitrarily long contexts with O(1)/O(window) state."""
+        return self.family in ("hybrid", "ssm")
+
+    def attn_config(self, causal=True) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.resolved_head_dim,
+            qk_norm=self.qk_norm, causal=causal, window=self.window,
+            rope_theta=self.rope_theta, chunk=self.attn_chunk,
+        )
+
+    def ssm_config(self) -> ssm_lib.SSMConfig:
+        return ssm_lib.SSMConfig(
+            d_model=self.d_model, d_inner=self.d_model,
+            n_heads=self.n_heads, state=self.ssm_state,
+        )
+
+    def xlstm_config(self) -> xlstm_lib.XLSTMConfig:
+        return xlstm_lib.XLSTMConfig(d_model=self.d_model,
+                                     n_heads=self.n_heads)
+
+    def moe_config(self) -> moe_lib.MoEConfig:
+        return moe_lib.MoEConfig(
+            d_model=self.d_model, d_ff=self.d_ff, n_experts=self.n_experts,
+            top_k=self.moe_top_k, capacity_factor=self.moe_capacity_factor,
+        )
+
+
+def _stack_descriptors(tree: Any, n: int) -> Any:
+    """Prepend a scanned 'layers' axis to every descriptor."""
+    return jax.tree.map(
+        lambda p: P((n, *p.shape), ("layers", *p.axes), p.init, p.scale),
+        tree, is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+class DecoderLM:
+    """Functional decoder LM; all methods are pure and jit-compatible."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        if cfg.family == "ssm":
+            self.layer_types = tuple(
+                "mlstm" if i % 2 == 0 else "slstm" for i in range(cfg.n_layers)
+            )
+        elif cfg.family == "hybrid":
+            self.layer_types = ("hybrid",) * cfg.n_layers
+        else:
+            self.layer_types = ("attn",) * cfg.n_layers
+        self.homogeneous = len(set(self.layer_types)) == 1 and cfg.scan_layers
+
+    # -- parameters ---------------------------------------------------------
+
+    def _block_descriptors(self, ltype: str) -> dict:
+        cfg = self.cfg
+        d: dict = {"ln1": rmsnorm_params(cfg.d_model)}
+        if ltype in ("attn", "hybrid"):
+            d["attn"] = attention_params(cfg.attn_config())
+        if ltype == "hybrid":
+            d["ssm"] = ssm_lib.ssm_params(cfg.ssm_config())
+        if ltype == "mlstm":
+            d["mlstm"] = xlstm_lib.mlstm_params(cfg.xlstm_config())
+        if ltype == "slstm":
+            d["slstm"] = xlstm_lib.slstm_params(cfg.xlstm_config())
+        if cfg.d_ff > 0:
+            d["ln2"] = rmsnorm_params(cfg.d_model)
+            if cfg.family == "moe":
+                d["ffn"] = moe_lib.moe_params(cfg.moe_config())
+            else:
+                d["ffn"] = mlp_params(cfg.d_model, cfg.d_ff, cfg.gated_mlp)
+        return d
+
+    def param_descriptors(self) -> dict:
+        cfg = self.cfg
+        tree: dict = {
+            "embed": P((cfg.vocab, cfg.d_model), ("vocab", "embed"), scale=1.0),
+            "final_norm": rmsnorm_params(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            tree["lm_head"] = P((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+        if self.homogeneous:
+            tree["layers"] = _stack_descriptors(
+                self._block_descriptors(self.layer_types[0]), cfg.n_layers
+            )
+        else:
+            tree["layers"] = [
+                self._block_descriptors(t) for t in self.layer_types
+            ]
+        return tree
+
+    def init(self, key: jax.Array, dtype=jnp.float32):
+        return init_params(key, self.param_descriptors(), dtype)
+
+    def abstract_params(self, dtype=jnp.float32):
+        return abstract_params(self.param_descriptors(), dtype)
+
+    def param_specs(self, mesh):
+        return param_specs(self.param_descriptors(), mesh)
+
+    def param_shardings(self, mesh, drop_axes: tuple = ()):
+        return param_shardings(self.param_descriptors(), mesh, drop_axes)
+
+    def n_params(self) -> int:
+        return count_params(self.param_descriptors())
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE discounts inactive experts)."""
+        total = self.n_params()
+        cfg = self.cfg
+        if cfg.family != "moe":
+            return total
+        per_expert = 3 * cfg.d_model * cfg.d_ff
+        inactive = cfg.n_layers * (cfg.n_experts - cfg.moe_top_k) * per_expert
+        return total - inactive
+
+    # -- forward ------------------------------------------------------------
+
+    def _block_apply(self, ltype: str, p: dict, x: jax.Array, mesh):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        h = rmsnorm(p["ln1"], x)
+        if ltype == "attn":
+            mix = attention(p["attn"], cfg.attn_config(), h,
+                            use_kernel=cfg.use_flash_kernel)
+        elif ltype == "hybrid":
+            mix = attention(p["attn"], cfg.attn_config(), h,
+                            use_kernel=cfg.use_flash_kernel)
+            mix = mix + ssm_lib.ssm(p["ssm"], cfg.ssm_config(), h)
+        elif ltype == "mlstm":
+            mix = xlstm_lib.mlstm(p["mlstm"], cfg.xlstm_config(), h)
+        else:  # slstm
+            mix, _ = xlstm_lib.slstm(p["slstm"], cfg.xlstm_config(), h)
+        x = x + mix
+        x = logical_constraint(x, ("batch", "seq", None), mesh)
+        if cfg.d_ff > 0:
+            h2 = rmsnorm(p["ln2"], x)
+            if cfg.family == "moe":
+                out = self._moe(p["ffn"], h2, mesh)
+                x = x + out.y
+                aux = out.aux_loss
+            else:
+                x = x + mlp(p["ffn"], h2)
+            x = logical_constraint(x, ("batch", "seq", None), mesh)
+        return x, aux
+
+    def _moe(self, p, h, mesh):
+        cfg = self.cfg
+        if cfg.moe_local_dispatch and mesh is not None:
+            return moe_lib.moe_local(p, cfg.moe_config(), h, mesh)
+        return moe_lib.moe(p, cfg.moe_config(), h)
+
+    def _backbone(self, params, x: jax.Array, mesh) -> tuple:
+        """Token embeddings -> final norm. Returns (hidden, total aux loss)."""
+        cfg = self.cfg
+        if self.homogeneous:
+            body = functools.partial(self._block_apply, self.layer_types[0],
+                                     mesh=mesh)
+            fn = (lambda carry, p: body(p, carry))
+            if cfg.remat:
+                fn = jax.checkpoint(
+                    fn, policy=jax.checkpoint_policies.nothing_saveable
+                )
+            x, auxs = jax.lax.scan(fn, x, params["layers"])
+            aux = jnp.sum(auxs)
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            for ltype, p in zip(self.layer_types, params["layers"]):
+                blk = functools.partial(self._block_apply, ltype, mesh=mesh)
+                if cfg.remat:
+                    blk = jax.checkpoint(
+                        blk, policy=jax.checkpoint_policies.nothing_saveable)
+                x, a = blk(p, x)
+                aux = aux + a
+        return rmsnorm(params["final_norm"], x), aux
+
+    def _logits(self, params, hidden: jax.Array, mesh) -> jax.Array:
+        cfg = self.cfg
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = jnp.einsum("bsd,dv->bsv", hidden, head.astype(hidden.dtype))
+        return logical_constraint(logits, ("batch", "seq", "vocab"), mesh)
+
+    def forward(self, params, tokens: jax.Array, mesh=None) -> jax.Array:
+        cfg = self.cfg
+        x = params["embed"].astype(cfg.dtype)[tokens]
+        x = logical_constraint(x, ("batch", "seq", None), mesh)
+        hidden, _ = self._backbone(params, x, mesh)
+        return self._logits(params, hidden, mesh)
+
+    def loss(self, params, batch: dict, mesh=None) -> tuple:
+        """Next-token cross entropy (+ MoE aux). batch: tokens/labels [B,S]."""
+        cfg = self.cfg
+        x = params["embed"].astype(cfg.dtype)[batch["tokens"]]
+        x = logical_constraint(x, ("batch", "seq", None), mesh)
+        hidden, aux = self._backbone(params, x, mesh)
+        logits = self._logits(params, hidden, mesh).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)
+        loss = jnp.mean(nll)
+        if cfg.family == "moe":
+            loss = loss + cfg.moe_aux_coef * aux / cfg.n_layers
+        return loss, {"nll": jnp.mean(nll), "aux": aux}
+
+    # -- serving ------------------------------------------------------------
+
+    def _cache_len(self, max_seq: int) -> int:
+        return min(self.cfg.window, max_seq) if self.cfg.window else max_seq
+
+    def _layer_cache(self, ltype: str, batch: int, max_seq: int, dtype):
+        cfg = self.cfg
+        if ltype == "attn":
+            return init_kv_cache(batch, self._cache_len(max_seq),
+                                 cfg.attn_config(), dtype)
+        if ltype == "hybrid":
+            return {
+                "attn": init_kv_cache(batch, self._cache_len(max_seq),
+                                      cfg.attn_config(), dtype),
+                "ssm": ssm_lib.init_ssm_cache(batch, cfg.ssm_config(), dtype),
+            }
+        if ltype == "mlstm":
+            return xlstm_lib.init_mlstm_cache(batch, cfg.xlstm_config())
+        return xlstm_lib.init_slstm_state(batch, cfg.xlstm_config())
+
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        if self.homogeneous:
+            one = self._layer_cache(self.layer_types[0], batch, max_seq, dtype)
+            return jax.tree.map(
+                lambda c: jnp.broadcast_to(c, (self.cfg.n_layers, *c.shape)),
+                one,
+            )
+        return [self._layer_cache(t, batch, max_seq, dtype)
+                for t in self.layer_types]
+
+    def _layer_cache_axes(self, ltype: str):
+        kv_axes = KVCache(k=("batch", "kv_seq", "kv_heads", None),
+                          v=("batch", "kv_seq", "kv_heads", None), length=())
+        ssm_axes = ssm_lib.SSMCache(h=("batch", "heads", None, None),
+                                    conv=("batch", None, "ssm_inner"))
+        if ltype == "attn":
+            return kv_axes
+        if ltype == "hybrid":
+            return {"attn": kv_axes, "ssm": ssm_axes}
+        if ltype == "mlstm":
+            return xlstm_lib.MLSTMCache(h=("batch", "heads", None, None))
+        return xlstm_lib.SLSTMState(*((("batch", "heads", None),) * 4))
+
+    def cache_axes(self):
+        if self.homogeneous:
+            one = self._layer_cache_axes(self.layer_types[0])
+            from .spec import _is_axes_leaf
+            return jax.tree.map(lambda a: ("layers", *a), one,
+                                is_leaf=_is_axes_leaf)
+        return [self._layer_cache_axes(t) for t in self.layer_types]
+
+    def cache_shardings(self, mesh, batch: int, max_seq: int,
+                        dtype=jnp.bfloat16):
+        from .spec import shardings_for_tree
+        shapes = jax.eval_shape(
+            functools.partial(self.init_cache, batch, max_seq, dtype))
+        return shardings_for_tree(shapes, self.cache_axes(), mesh)
+
+    def _block_decode(self, ltype: str, p: dict, x: jax.Array, cache, mesh):
+        cfg = self.cfg
+        h = rmsnorm(p["ln1"], x)
+        if ltype == "attn":
+            mix, new_cache = attention_decode(p["attn"], cfg.attn_config(), h,
+                                              cache, mesh=mesh)
+        elif ltype == "hybrid":
+            mix_a, kv = attention_decode(p["attn"], cfg.attn_config(), h,
+                                         cache["attn"], mesh=mesh)
+            mix_s, sc = ssm_lib.ssm_decode(p["ssm"], cfg.ssm_config(), h,
+                                           cache["ssm"])
+            mix, new_cache = mix_a + mix_s, {"attn": kv, "ssm": sc}
+        elif ltype == "mlstm":
+            mix, new_cache = xlstm_lib.mlstm_decode(p["mlstm"],
+                                                    cfg.xlstm_config(), h,
+                                                    cache)
+        else:
+            wx = jnp.einsum("bsd,de->bse", h,
+                            p["slstm"]["w_gates"].astype(h.dtype))
+            st = xlstm_lib._slstm_cell(p["slstm"], cfg.xlstm_config(), cache,
+                                       wx[:, 0])
+            hs = rmsnorm(p["slstm"]["head_norm"], st.h[:, None])
+            b = x.shape[0]
+            hs = hs.reshape(b, 1, cfg.d_model).astype(x.dtype)
+            mix = jnp.einsum("bse,ed->bsd", hs,
+                             p["slstm"]["w_out"].astype(x.dtype))
+            new_cache = st
+        x = x + mix
+        if cfg.d_ff > 0:
+            h2 = rmsnorm(p["ln2"], x)
+            if cfg.family == "moe":
+                x = x + self._moe(p["ffn"], h2, mesh).y
+            else:
+                x = x + mlp(p["ffn"], h2)
+        return x, new_cache
+
+    def decode_step(self, params, tokens: jax.Array, cache, mesh=None):
+        """tokens: [B] -> (logits [B, V], new cache). One decode position."""
+        cfg = self.cfg
+        x = params["embed"].astype(cfg.dtype)[tokens][:, None]  # [B,1,D]
+        if self.homogeneous:
+            def fn(carry, xs):
+                p, c = xs
+                y, nc = self._block_decode(self.layer_types[0], p, carry, c,
+                                           mesh)
+                return y, nc
+            x, new_cache = jax.lax.scan(fn, x, (params["layers"], cache))
+        else:
+            new_cache = []
+            for ltype, p, c in zip(self.layer_types, params["layers"], cache):
+                x, nc = self._block_decode(ltype, p, x, c, mesh)
+                new_cache.append(nc)
+        hidden = rmsnorm(params["final_norm"], x)
+        logits = self._logits(params, hidden, mesh)[:, 0]
+        return logits.astype(jnp.float32), new_cache
+
+    def prefill(self, params, tokens: jax.Array, mesh=None):
+        """Run the full prompt, build decode caches, return last logits.
+
+        Implemented as forward + cache construction per layer. Attention
+        caches keep the last ``window`` (or all) positions; SSM/xLSTM caches
+        are the final recurrent states.
+        """
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = params["embed"].astype(cfg.dtype)[tokens]
+        x = logical_constraint(x, ("batch", "seq", None), mesh)
+
+        def prefill_block(ltype, p, x):
+            h = rmsnorm(p["ln1"], x)
+            cache = None
+            if ltype in ("attn", "hybrid"):
+                from .layers import _qkv
+                acfg = cfg.attn_config()
+                q, k, v = _qkv(p["attn"], acfg, h, jnp.arange(s))
+                from .layers import _sdpa, _sdpa_chunked
+                mix = (_sdpa_chunked(q, k, v, acfg) if acfg.chunk > 0
+                       else _sdpa(q, k, v, acfg))
+                mix = jnp.einsum("bshk,hkd->bsd", mix,
+                                 p["attn"]["wo"].astype(x.dtype))
+                cl = self._cache_len(s)
+                # rolling-buffer alignment: slot = pos % cl
+                last = jnp.arange(s - cl, s)
+                slots = last % cl
+                kc = jnp.zeros((b, cl, *k.shape[2:]), jnp.bfloat16
+                               ).at[:, slots].set(k[:, last].astype(jnp.bfloat16))
+                vc = jnp.zeros((b, cl, *v.shape[2:]), jnp.bfloat16
+                               ).at[:, slots].set(v[:, last].astype(jnp.bfloat16))
+                cache = KVCache(k=kc, v=vc, length=jnp.asarray(s, jnp.int32))
+                if ltype == "hybrid":
+                    scfg = cfg.ssm_config()
+                    xi = jnp.einsum("bsd,de->bse", h,
+                                    p["ssm"]["w_in"].astype(h.dtype))
+                    xin, z = jnp.split(xi, 2, axis=-1)
+                    xc, conv_carry = ssm_lib._causal_conv(
+                        xin, p["ssm"]["conv"].astype(h.dtype))
+                    a, dt, bm, cm = ssm_lib._gates(p["ssm"], scfg, h)
+                    vals = xc.reshape(b, s, scfg.n_heads, scfg.head_dim)
+                    y, h_fin = ssm_lib.ssd_scan(a, dt, bm, cm, vals, scfg.chunk)
+                    y = y + p["ssm"]["d_skip"].astype(h.dtype)[None, None, :, None] * vals
+                    y = y.reshape(b, s, scfg.d_inner) * jax.nn.silu(z)
+                    mix = mix + jnp.einsum("bse,ed->bsd", y,
+                                           p["ssm"]["w_out"].astype(h.dtype))
+                    cache = {
+                        "attn": cache,
+                        "ssm": ssm_lib.SSMCache(
+                            h=h_fin, conv=xin[:, -(scfg.conv_kernel - 1):]
+                            .astype(jnp.bfloat16)),
+                    }
+            elif ltype == "mlstm":
+                xcfg = cfg.xlstm_config()
+                q, k, v, ig, fg = xlstm_lib._mlstm_gates(p["mlstm"], xcfg, h)
+                ones = jnp.ones((*v.shape[:-1], 1), v.dtype)
+                y_ext, h_fin = ssm_lib.ssd_scan(
+                    fg, ig, k, q, jnp.concatenate([v, ones], -1), xcfg.chunk)
+                z = jnp.einsum("bsd,de->bse", h,
+                               p["mlstm"]["w_z"].astype(h.dtype))
+                mix = xlstm_lib._mlstm_norm_out(p["mlstm"], xcfg, y_ext, z,
+                                                x.dtype)
+                cache = xlstm_lib.MLSTMCache(h=h_fin)
+            else:  # slstm
+                mix, cache = xlstm_lib.slstm(p["slstm"], cfg.xlstm_config(), h)
+            x = x + mix
+            if cfg.d_ff > 0:
+                h2 = rmsnorm(p["ln2"], x)
+                if cfg.family == "moe":
+                    x = x + self._moe(p["ffn"], h2, mesh).y
+                else:
+                    x = x + mlp(p["ffn"], h2)
+            return x, cache
+
+        if self.homogeneous:
+            def fn(carry, p):
+                return prefill_block(self.layer_types[0], p, carry)
+            x, caches = jax.lax.scan(fn, x, params["layers"])
+        else:
+            caches = []
+            for ltype, p in zip(self.layer_types, params["layers"]):
+                x, c = prefill_block(ltype, p, x)
+                caches.append(c)
+        hidden = rmsnorm(params["final_norm"], x[:, -1:])
+        logits = self._logits(params, hidden, mesh)[:, 0]
+        return logits.astype(jnp.float32), caches

@@ -1,0 +1,150 @@
+"""Parameter descriptors with logical sharding axes (MaxText-style rules).
+
+Models declare parameters as ``P(shape, logical_axes)`` descriptors in a
+nested dict. ``init_params`` materializes them; ``param_specs`` resolves each
+logical axis to mesh axes via LOGICAL_RULES with a divisibility fallback
+(a dim that does not divide evenly over its mesh axes is left unsharded, so
+e.g. GQA kv_heads=1 or vocab=32001 simply replicate instead of erroring).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+class P(NamedTuple):
+    """Declarative parameter: shape + logical axis names + initializer."""
+
+    shape: tuple
+    axes: tuple          # logical axis name per dim (None -> replicated)
+    init: str = "normal"  # normal | zeros | ones | scaled (fan-in)
+    scale: float = 1.0
+
+
+#: logical axis -> tuple of mesh axis names (missing mesh axes are skipped)
+LOGICAL_RULES: dict[str, tuple] = {
+    "vocab": ("model",),
+    "embed": ("pod", "data"),      # FSDP / ZeRO-3 weight sharding
+    "heads": ("model",),           # tensor parallel attention
+    "kv_heads": ("model",),
+    "mlp": ("model",),             # tensor parallel feed-forward
+    "experts": ("model",),         # expert parallel MoE
+    "ssm_inner": ("model",),
+    "batch": ("pod", "data"),      # data parallel
+    "kv_seq": ("model",),          # sequence-sharded KV cache (flash-decode)
+    "seq": (),
+    "head_dim": (),
+    "state": (),
+    "layers": (),
+    "conv": (),
+}
+
+
+def mesh_axis_size(mesh: Mesh, names: tuple) -> int:
+    return math.prod(mesh.shape[n] for n in names if n in mesh.axis_names)
+
+
+def resolve_spec(shape: tuple, axes: tuple, mesh: Mesh,
+                 drop_axes: tuple = ()) -> PartitionSpec:
+    """Logical axes -> PartitionSpec honoring divisibility and single-use.
+
+    ``drop_axes``: logical names to leave unsharded — e.g. serving paths drop
+    'embed' (the FSDP dim) so weights replicate over the data axes instead of
+    being re-gathered every decode step."""
+    used: set = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        entry = None
+        if ax is not None and ax not in drop_axes:
+            mesh_axes = tuple(
+                m for m in LOGICAL_RULES.get(ax, ())
+                if m in mesh.axis_names and m not in used
+            )
+            if mesh_axes and dim % mesh_axis_size(mesh, mesh_axes) == 0:
+                entry = mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+                used.update(mesh_axes)
+        out.append(entry)
+    while out and out[-1] is None:  # trailing Nones are implicit
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def is_descriptor(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def init_params(key: jax.Array, tree: Any, dtype=jnp.float32) -> Any:
+    """Materialize a descriptor tree into arrays (fan-in scaled normals)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_descriptor)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, p in zip(keys, leaves):
+        if p.init == "zeros":
+            out.append(jnp.zeros(p.shape, dtype))
+        elif p.init == "ones":
+            out.append(jnp.ones(p.shape, dtype))
+        else:
+            fan_in = p.shape[0] if len(p.shape) == 1 else math.prod(p.shape[:-1])
+            std = p.scale / math.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, p.shape) * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(tree: Any, dtype=jnp.float32) -> Any:
+    """ShapeDtypeStruct tree (no allocation) — used by the dry-run."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), tree,
+        is_leaf=is_descriptor,
+    )
+
+
+def param_specs(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda p: resolve_spec(p.shape, p.axes, mesh), tree,
+        is_leaf=is_descriptor,
+    )
+
+
+def param_shardings(tree: Any, mesh: Mesh, drop_axes: tuple = ()) -> Any:
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, resolve_spec(p.shape, p.axes, mesh,
+                                                   drop_axes)),
+        tree, is_leaf=is_descriptor,
+    )
+
+
+def logical_constraint(x: jax.Array, axes: tuple, mesh: Mesh | None) -> jax.Array:
+    """Activation sharding constraint by logical axes (no-op without a mesh)."""
+    if mesh is None or not mesh.axis_names or math.prod(mesh.devices.shape) == 1:
+        return x
+    spec = resolve_spec(x.shape, axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def count_params(tree: Any) -> int:
+    """Total parameter count of a descriptor tree (no materialization)."""
+    leaves = jax.tree.leaves(tree, is_leaf=is_descriptor)
+    return sum(math.prod(p.shape) for p in leaves)
+
+
+def _is_axes_leaf(x: Any) -> bool:
+    return isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x
+    )
+
+
+def shardings_for_tree(shapes: Any, axes: Any, mesh: Mesh) -> Any:
+    """NamedShardings for an arbitrary pytree of ShapeDtypeStructs given a
+    structurally-matching tree whose leaves are logical-axes tuples."""
+    s_leaves, treedef = jax.tree.flatten(shapes)
+    a_leaves = jax.tree.flatten(axes, is_leaf=_is_axes_leaf)[0]
+    assert len(s_leaves) == len(a_leaves), "axes tree mismatch"
+    out = [
+        NamedSharding(mesh, resolve_spec(s.shape, a, mesh))
+        for s, a in zip(s_leaves, a_leaves)
+    ]
+    return jax.tree.unflatten(treedef, out)

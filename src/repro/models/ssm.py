@@ -1,0 +1,181 @@
+"""Selective state-space (Mamba-2/SSD-style) layer — chunked parallel scan.
+
+The recurrence per head (state matrix h: [N, Dh]):
+
+    h_t = a_t * h_{t-1} + dt_t * (B_t ⊗ x_t)        a_t = exp(-softplus(A) dt_t)
+    y_t = C_t · h_t + D * x_t
+
+is evaluated in chunks of length Q ("SSD" decomposition): within a chunk a
+masked decay matrix turns the scan into two small matmuls (linear-attention
+form); across chunks a lax.scan carries the [B, H, N, Dh] state. This is the
+TPU-native adaptation of Mamba's CUDA selective-scan: MXU-friendly chunk
+matmuls instead of a warp-level sequential scan (DESIGN.md "hardware
+adaptation"). Decode is the O(1) recurrence step.
+
+Used by hymba's parallel attention+SSM heads and reused (as chunked gated
+linear attention) by the xLSTM mLSTM block.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .spec import P
+
+
+class SSMConfig(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int
+    state: int          # N
+    conv_kernel: int = 4
+    chunk: int = 128
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def ssm_params(cfg: SSMConfig) -> dict:
+    d, i, h, n = cfg.d_model, cfg.d_inner, cfg.n_heads, cfg.state
+    return {
+        "w_in": P((d, 2 * i), ("embed", "ssm_inner")),       # x and gate z
+        "conv": P((cfg.conv_kernel, i), ("conv", "ssm_inner"), scale=0.5),
+        "w_dt": P((d, h), ("embed", "heads"), scale=0.1),
+        "dt_bias": P((h,), ("heads",), init="zeros"),
+        "w_bc": P((d, 2 * h * n), ("embed", "heads"), scale=0.5),
+        "a_log": P((h,), ("heads",), init="zeros"),
+        "d_skip": P((h,), ("heads",), init="ones"),
+        "w_out": P((i, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, carry: jax.Array | None = None):
+    """Depthwise causal conv along seq. x: [B,S,I], w: [K,I].
+
+    carry: [B, K-1, I] previous inputs for decode; returns (y, new_carry).
+    """
+    k = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(k)
+    )
+    new_carry = xp[:, -(k - 1):] if k > 1 else carry
+    return jax.nn.silu(y), new_carry
+
+
+def _gates(params, cfg: SSMConfig, xr: jax.Array):
+    """Common projections. xr: [B,S,D] -> (a, dt, B, C) with
+    a,dt: [B,S,H]; B,C: [B,S,H,N]."""
+    b, s, _ = xr.shape
+    h, n = cfg.n_heads, cfg.state
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", xr, params["w_dt"].astype(xr.dtype))
+        + params["dt_bias"].astype(xr.dtype)
+    )
+    bc = jnp.einsum("bsd,de->bse", xr, params["w_bc"].astype(xr.dtype))
+    bmat, cmat = jnp.split(bc.reshape(b, s, h, 2 * n), 2, axis=-1)
+    a = jnp.exp(-jax.nn.softplus(params["a_log"].astype(jnp.float32)) * dt.astype(jnp.float32))
+    return a, dt, bmat, cmat
+
+
+def ssd_scan(a, dt, bmat, cmat, values, chunk: int, h0=None):
+    """Chunked linear recurrence.
+
+    a, dt: [B,S,H]; bmat/cmat: [B,S,H,N]; values: [B,S,H,Dh].
+    Returns (y: [B,S,H,Dh], h_final: [B,H,N,Dh]). f32 state.
+    """
+    b, s, h, n = bmat.shape
+    dh = values.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+
+    def resh(x):
+        return x.reshape(b, nc, q, *x.shape[2:]).swapaxes(0, 1)
+
+    a_c, dt_c, b_c, c_c, v_c = map(resh, (a, dt, bmat, cmat, values))
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, dh), jnp.float32)
+
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_step(hc, xs):
+        ac, dtc, bb, cc, vv = xs          # [B,Q,H,...]
+        la = jnp.log(jnp.maximum(ac.astype(jnp.float32), 1e-37))
+        cum = jnp.cumsum(la, axis=1)      # [B,Q,H] inclusive
+        # intra-chunk: G[i,j] = (C_i . B_j) exp(cum_i - cum_j) (j <= i)
+        decay = jnp.exp(cum[:, :, None] - cum[:, None, :, :])  # [B,Q,Q,H]
+        decay = jnp.where(mask[None, :, :, None], decay, 0.0)
+        g = jnp.einsum("bihn,bjhn->bijh", cc.astype(jnp.float32),
+                       bb.astype(jnp.float32)) * decay
+        g = g * dtc.astype(jnp.float32)[:, None]
+        y_intra = jnp.einsum("bijh,bjhd->bihd", g, vv.astype(jnp.float32))
+        # inter-chunk: C_i . (exp(cum_i) h_start)
+        y_inter = jnp.einsum(
+            "bihn,bhnd->bihd", cc.astype(jnp.float32) * jnp.exp(cum)[..., None], hc
+        )
+        # state update
+        w = jnp.exp(cum[:, -1:, :] - cum) * dtc.astype(jnp.float32)  # [B,Q,H]
+        h_new = (
+            jnp.exp(cum[:, -1])[:, :, None, None] * hc
+            + jnp.einsum("bqh,bqhn,bqhd->bhnd", w, bb.astype(jnp.float32),
+                         vv.astype(jnp.float32))
+        )
+        return h_new, (y_intra + y_inter).astype(values.dtype)
+
+    h_final, y = jax.lax.scan(chunk_step, h0, (a_c, dt_c, b_c, c_c, v_c))
+    y = y.swapaxes(0, 1).reshape(b, s, h, dh)
+    return y, h_final
+
+
+class SSMCache(NamedTuple):
+    h: jax.Array         # [B, H, N, Dh] f32
+    conv: jax.Array      # [B, K-1, I]
+
+
+def init_ssm_cache(batch: int, cfg: SSMConfig, dtype=jnp.bfloat16) -> SSMCache:
+    return SSMCache(
+        h=jnp.zeros((batch, cfg.n_heads, cfg.state, cfg.head_dim), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner), dtype),
+    )
+
+
+def ssm(params: dict, cfg: SSMConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence forward. x: [B,S,D] -> [B,S,D]."""
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    xi = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(x.dtype))
+    xin, z = jnp.split(xi, 2, axis=-1)
+    xc, _ = _causal_conv(xin, params["conv"].astype(x.dtype))
+    a, dt, bmat, cmat = _gates(params, cfg, x)
+    vals = xc.reshape(b, s, h, dh)
+    y, _ = ssd_scan(a, dt, bmat, cmat, vals, cfg.chunk)
+    y = y + params["d_skip"].astype(x.dtype)[None, None, :, None] * vals
+    y = y.reshape(b, s, cfg.d_inner) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+
+
+def ssm_decode(params: dict, cfg: SSMConfig, x: jax.Array, cache: SSMCache):
+    """Single-token decode. x: [B,1,D] -> ([B,1,D], new cache)."""
+    b = x.shape[0]
+    h, dh, n = cfg.n_heads, cfg.head_dim, cfg.state
+    xi = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(x.dtype))
+    xin, z = jnp.split(xi, 2, axis=-1)
+    xc, conv_new = _causal_conv(xin, params["conv"].astype(x.dtype), cache.conv)
+    a, dt, bmat, cmat = _gates(params, cfg, x)
+    v = xc.reshape(b, 1, h, dh)[:, 0].astype(jnp.float32)          # [B,H,Dh]
+    a0 = a[:, 0]                                                    # [B,H]
+    u = dt[:, 0].astype(jnp.float32)[..., None, None] * (
+        bmat[:, 0].astype(jnp.float32)[..., None] * v[:, :, None, :]
+    )                                                               # [B,H,N,Dh]
+    h_new = a0[..., None, None] * cache.h + u
+    y = jnp.einsum("bhn,bhnd->bhd", cmat[:, 0].astype(jnp.float32), h_new)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * v
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+    return out, SSMCache(h=h_new, conv=conv_new)

@@ -1,0 +1,183 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) + sLSTM (scalar memory,
+recurrent). Simplifications vs arXiv:2405.04517 (documented in DESIGN.md):
+
+  * mLSTM is expressed as gated linear attention and reuses the SSD chunk
+    machinery from models.ssm (state = k⊗v matrix per head + normalizer
+    column). Input gate uses softplus intensity instead of the stabilized
+    exponential gate — same qualitative dynamics, numerically tame.
+  * sLSTM keeps the stabilized exponential gating (m_t running max trick) and
+    the per-head recurrent R matrices; it scans over time (inherently
+    sequential, as the paper notes).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .spec import P
+from .ssm import ssd_scan
+
+
+class XLSTMConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    chunk: int = 128
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_params(cfg: XLSTMConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    return {
+        "w_q": P((d, d), ("embed", "heads")),
+        "w_k": P((d, d), ("embed", "heads")),
+        "w_v": P((d, d), ("embed", "heads")),
+        "w_if": P((d, 2 * h), ("embed", "heads"), scale=0.1),
+        "if_bias": P((2 * h,), ("heads",), init="zeros"),
+        "w_z": P((d, d), ("embed", "heads")),
+        "head_norm": {"scale": P((cfg.head_dim,), (None,), init="ones")},
+        "w_out": P((d, d), ("heads", "embed")),
+    }
+
+
+def _mlstm_gates(params, cfg: XLSTMConfig, x):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, params["w_q"].astype(x.dtype)).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,de->bse", x, params["w_k"].astype(x.dtype)).reshape(b, s, h, dh)
+    v = jnp.einsum("bsd,de->bse", x, params["w_v"].astype(x.dtype)).reshape(b, s, h, dh)
+    k = k / jnp.sqrt(jnp.asarray(dh, x.dtype))
+    gif = jnp.einsum("bsd,de->bse", x, params["w_if"].astype(x.dtype)) + params[
+        "if_bias"
+    ].astype(x.dtype)
+    i_pre, f_pre = jnp.split(gif.reshape(b, s, 2, h), 2, axis=2)
+    i_gate = jax.nn.softplus(i_pre[:, :, 0])            # [B,S,H] >= 0
+    f_gate = jax.nn.sigmoid(f_pre[:, :, 0].astype(jnp.float32))  # decay in (0,1)
+    return q, k, v, i_gate, f_gate
+
+
+def _mlstm_norm_out(params, cfg, y_ext, z, x_dtype):
+    """Split (values, normalizer), normalize, head-norm, gate, project."""
+    y, norm = y_ext[..., :-1], y_ext[..., -1:]
+    y = y / jnp.maximum(jnp.abs(norm), 1.0)
+    from .layers import rmsnorm
+    y = rmsnorm(params["head_norm"], y)
+    b, s = y.shape[:2]
+    y = y.reshape(b, s, cfg.d_model).astype(x_dtype) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x_dtype))
+
+
+def mlstm(params: dict, cfg: XLSTMConfig, x: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    q, k, v, i_gate, f_gate = _mlstm_gates(params, cfg, x)
+    ones = jnp.ones((*v.shape[:-1], 1), v.dtype)
+    v_ext = jnp.concatenate([v, ones], axis=-1)          # normalizer column
+    y_ext, _ = ssd_scan(f_gate, i_gate, k, q, v_ext, cfg.chunk)
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"].astype(x.dtype))
+    return _mlstm_norm_out(params, cfg, y_ext, z, x.dtype)
+
+
+class MLSTMCache(NamedTuple):
+    h: jax.Array   # [B, H, Dh, Dh+1] f32 (matrix memory + normalizer)
+
+
+def init_mlstm_cache(batch: int, cfg: XLSTMConfig) -> MLSTMCache:
+    return MLSTMCache(
+        h=jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim + 1),
+                    jnp.float32)
+    )
+
+
+def mlstm_decode(params: dict, cfg: XLSTMConfig, x: jax.Array,
+                 cache: MLSTMCache):
+    b = x.shape[0]
+    q, k, v, i_gate, f_gate = _mlstm_gates(params, cfg, x)
+    ones = jnp.ones((*v.shape[:-1], 1), v.dtype)
+    v_ext = jnp.concatenate([v, ones], axis=-1)
+    u = i_gate[:, 0, :, None, None].astype(jnp.float32) * (
+        k[:, 0].astype(jnp.float32)[..., None]
+        * v_ext[:, 0].astype(jnp.float32)[:, :, None, :]
+    )
+    h_new = f_gate[:, 0, :, None, None] * cache.h + u
+    y_ext = jnp.einsum("bhn,bhnd->bhd", q[:, 0].astype(jnp.float32), h_new)
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"].astype(x.dtype))
+    out = _mlstm_norm_out(params, cfg, y_ext[:, None], z, x.dtype)
+    return out, MLSTMCache(h=h_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_params(cfg: XLSTMConfig) -> dict:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "w_gates": P((d, 4 * d), ("embed", "heads")),        # z, i, f, o
+        "r_gates": P((h, dh, 4 * dh), ("heads", None, None), scale=0.5),
+        "b_gates": P((4 * d,), ("heads",), init="zeros"),
+        "head_norm": {"scale": P((dh,), (None,), init="ones")},
+        "w_out": P((d, d), ("heads", "embed")),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # [B, H, Dh]
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array   # stabilizer (running max of log gates)
+
+
+def init_slstm_state(batch: int, cfg: XLSTMConfig) -> SLSTMState:
+    z = jnp.zeros((batch, cfg.n_heads, cfg.head_dim), jnp.float32)
+    return SLSTMState(c=z, n=z + 1e-6, h=z, m=z - 10.0)
+
+
+def _slstm_cell(params, cfg: XLSTMConfig, state: SLSTMState, wx_t):
+    """One timestep. wx_t: [B, 4*D] precomputed input projection."""
+    b = wx_t.shape[0]
+    h_, dh = cfg.n_heads, cfg.head_dim
+    rec = jnp.einsum("bhd,hde->bhe", state.h.astype(wx_t.dtype),
+                     params["r_gates"].astype(wx_t.dtype))   # [B,H,4*Dh]
+    gates = wx_t.reshape(b, h_, 4 * dh) + rec + params["b_gates"].astype(
+        wx_t.dtype
+    ).reshape(h_, 4 * dh)
+    z_pre, i_pre, f_pre, o_pre = jnp.split(gates.astype(jnp.float32), 4, -1)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    lf = -jax.nn.softplus(-f_pre)     # log sigmoid(f_pre)
+    li = i_pre
+    m_new = jnp.maximum(lf + state.m, li)
+    i_g = jnp.exp(li - m_new)
+    f_g = jnp.exp(lf + state.m - m_new)
+    c_new = f_g * state.c + i_g * z
+    n_new = f_g * state.n + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c=c_new, n=n_new, h=h_new, m=m_new)
+
+
+def slstm(params: dict, cfg: XLSTMConfig, x: jax.Array,
+          state: SLSTMState | None = None):
+    """Full-sequence sLSTM. x: [B,S,D] -> ([B,S,D], final state)."""
+    b, s, d = x.shape
+    wx = jnp.einsum("bsd,de->bse", x, params["w_gates"].astype(x.dtype))
+    if state is None:
+        state = init_slstm_state(b, cfg)
+
+    def step(st, wx_t):
+        st = _slstm_cell(params, cfg, st, wx_t)
+        return st, st.h
+
+    state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1)  # [B,S,H,Dh]
+    from .layers import rmsnorm
+    hs = rmsnorm(params["head_norm"], hs).reshape(b, s, d).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", hs, params["w_out"].astype(x.dtype)), state

@@ -1,0 +1,36 @@
+"""Elastic scaling: reshard a training state onto a different mesh.
+
+When a pod is lost (512 -> 256 chips) or gained, the surviving job rebuilds
+its mesh, recomputes the parameter shardings for the new mesh (models.spec
+resolves the same logical rules against the new axis sizes), and restores the
+step-atomic checkpoint with device_put against the new shardings
+(checkpoint.restore's resharding path). Nothing about the model or optimizer
+needs to change because shardings are derived, not stored.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh
+
+from ..checkpoint import checkpointer
+from ..train.step import abstract_train_state, state_shardings
+
+
+def reshard_restore(model, ckpt_dir: str, new_mesh: Mesh, *,
+                    compress: bool = False, step: int | None = None) -> Any:
+    """Load the latest (or given) step onto ``new_mesh`` with fresh shardings."""
+    if step is None:
+        step = checkpointer.latest_step(ckpt_dir)
+        assert step is not None, f"no checkpoint under {ckpt_dir}"
+    target = abstract_train_state(model, compress=compress)
+    shardings = state_shardings(model, new_mesh, compress=compress)
+    return checkpointer.restore(ckpt_dir, step, target, shardings), step
+
+
+def reshard_in_memory(state: Any, model, new_mesh: Mesh, *,
+                      compress: bool = False) -> Any:
+    """Live resharding (no disk round-trip) for planned topology changes."""
+    shardings = state_shardings(model, new_mesh, compress=compress)
+    return jax.tree.map(jax.device_put, state, shardings)

@@ -1,0 +1,102 @@
+"""Batched serving engine: continuous-batching decode loop over a KV cache.
+
+Requests enter a waiting queue; each engine step either (a) prefills a
+waiting request into a free cache slot or (b) decodes one token for every
+active slot. Slots whose sequence emits EOS (or hits max_new_tokens) free
+their cache row. This is the vLLM-style loop reduced to its essentials, and
+is the workload the paper's admission controller gates in
+examples/admission_serving.py (an engine = a deployment whose "cores" are
+cache slots that scale out with load).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # [S] int32
+    max_new_tokens: int = 32
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, max_batch: int = 8,
+                 max_seq: int = 512, eos_id: int = 1, mesh=None):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.mesh = mesh
+        self.cache = model.init_cache(max_batch, max_seq, dtype=jnp.float32)
+        self.active: list[Optional[Request]] = [None] * max_batch
+        self.waiting: list[Request] = []
+        self.tokens = np.zeros(max_batch, np.int32)
+        self._decode = jax.jit(
+            lambda p, t, c: model.decode_step(p, t, c, mesh))
+
+    # -- queue management -----------------------------------------------------
+
+    def submit(self, req: Request):
+        self.waiting.append(req)
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.active)
+
+    def _admit_one(self) -> bool:
+        """Prefill one waiting request into a free slot (single-slot prefill:
+        decode its prompt token by token into the shared cache row)."""
+        if not self.waiting:
+            return False
+        try:
+            slot = self.active.index(None)
+        except ValueError:
+            return False
+        req = self.waiting.pop(0)
+        # teacher-force the prompt through decode steps for this slot only
+        for tok in req.prompt[:-1]:
+            step_tokens = self.tokens.copy()
+            step_tokens[slot] = tok
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(step_tokens), self.cache)
+        self.tokens[slot] = int(req.prompt[-1])
+        self.active[slot] = req
+        return True
+
+    def step(self) -> int:
+        """One engine step; returns number of tokens emitted."""
+        self._admit_one()
+        if self.n_active == 0:
+            return 0
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self.tokens), self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        emitted = 0
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.out_tokens.append(tok)
+            self.tokens[slot] = tok
+            emitted += 1
+            if tok == self.eos_id or len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                self.active[slot] = None
+        return emitted
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list:
+        done = []
+        for _ in range(max_steps):
+            if not self.waiting and self.n_active == 0:
+                break
+            self.step()
+        return done

@@ -1,0 +1,292 @@
+"""Monte-Carlo cluster simulator (paper §5): lax.scan over time, vmap over runs.
+
+Deployments live in a fixed slot array (jit/vmap-friendly replacement for the
+paper's dynamic deployment lists — see DESIGN.md "hardware adaptation"). Each
+step of length ``dt`` hours:
+
+  1. core deaths (exact binomial thinning) + spontaneous shutdown (M process)
+  2. scale-out requests; granted greedily in slot order while the cluster has
+     capacity, otherwise logged as SLA failures (entire request fails)
+  3. belief updates from the observed events (conjugate, core.belief)
+  4. arrivals (Poisson, capped at ``max_arrivals`` per step) admitted by the
+     policy via core.policies.admit_sequential, then placed into free slots
+
+Arrival parameters are **pre-drawn outside the scan** so importance sampling
+(App. D) can bucket a run by its badness measure before paying for the full
+simulation, and so labeled/unlabeled (§7) and pseudo-observation (§6) priors
+can be prepared per arrival.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.belief import (GammaBelief, apply_pseudo_observations,
+                           belief_from_prior, observe_initial_size,
+                           update_on_events)
+from ..core.moments import MomentCurves, moment_curves
+from ..core.policies import ZEROTH, PolicyParams, admit_sequential
+from ..core.pricing import mixture_moments
+from ..core.processes import (DeploymentParams, PopulationPriors,
+                              sample_params, sample_pseudo_observations,
+                              sample_step_events)
+
+GLOBAL, PSEUDO, MIX_LABELED, MIX_UNLABELED = "global", "pseudo", "labeled", "unlabeled"
+
+
+class SimConfig(NamedTuple):
+    """Static simulation configuration (python values; changing any re-jits)."""
+
+    capacity: float = 2_000.0
+    arrival_rate: float = 0.1        # deployments/hour (paper: 1.0 at c=20,000)
+    horizon_hours: float = 365 * 24.0
+    dt: float = 6.0                  # hours per step
+    max_slots: int = 1024
+    max_arrivals: int = 4            # cap per step (Poisson tail clipped)
+    prior_mode: str = GLOBAL         # GLOBAL | PSEUDO | MIX_LABELED | MIX_UNLABELED
+    n_pseudo_obs: int = 0            # paper §6: 0/1/5/50
+    d_points: int = 24               # D-term checkpoint count
+    use_kernel: bool = False         # Pallas moment_curves kernel (TPU path;
+                                     # interpret-mode on CPU, so off by default)
+    priors: PopulationPriors = None  # set via make_config
+
+    @property
+    def n_steps(self) -> int:
+        return int(round(self.horizon_hours / self.dt))
+
+
+class ArrivalStream(NamedTuple):
+    """Pre-drawn per-(step, arrival-slot) quantities. Leading dims [T, A]."""
+
+    params: DeploymentParams         # true parameters of the arriving deployment
+    c0: jax.Array                    # initial request size
+    bel: GammaBelief                 # provider's prior belief for the arrival
+    bel_alt: GammaBelief             # second mixture component (unlabeled mode)
+    n_arrivals: jax.Array            # [T] arrivals per step (already capped)
+
+
+class RunMetrics(NamedTuple):
+    utilization: jax.Array        # time-average active cores / capacity
+    failure_rate: jax.Array       # failed scale-out requests / total requests
+    total_requests: jax.Array
+    failed_requests: jax.Array
+    arrivals_accepted: jax.Array
+    arrivals_rejected: jax.Array
+    slot_overflow: jax.Array      # arrivals lost to slot-array exhaustion
+    util_trace: jax.Array         # [T] active cores after each step
+    fail_trace: jax.Array         # [T] failed requests per step
+
+
+class SimState(NamedTuple):
+    alive: jax.Array              # [S] bool
+    cores: jax.Array              # [S] float32
+    params: DeploymentParams      # [S]
+    bel: GammaBelief              # [S]
+    core_hours: jax.Array
+    fail_requests: jax.Array
+    total_requests: jax.Array
+    arr_accepted: jax.Array
+    arr_rejected: jax.Array
+    slot_overflow: jax.Array
+
+
+def draw_arrival_stream(key: jax.Array, cfg: SimConfig) -> ArrivalStream:
+    """Pre-draw every arrival's true params, request size and prior belief."""
+    t_steps, a_max = cfg.n_steps, cfg.max_arrivals
+    shape = (t_steps, a_max)
+    kn, kp, kc, ko, kq, kb = jax.random.split(key, 6)
+    n_arr = jnp.minimum(
+        jax.random.poisson(kn, cfg.arrival_rate * cfg.dt, (t_steps,)), a_max
+    )
+    params = sample_params(kp, cfg.priors, shape)
+    c0 = (1 + jax.random.poisson(kc, params.sig)).astype(jnp.float32)
+
+    prior = belief_from_prior(cfg.priors, shape)
+    if cfg.prior_mode == GLOBAL:
+        bel = prior
+        bel_alt = bel
+    elif cfg.prior_mode == PSEUDO:
+        obs = sample_pseudo_observations(ko, params, cfg.priors, cfg.n_pseudo_obs)
+        bel = apply_pseudo_observations(prior, obs, cfg.priors)
+        bel_alt = bel
+    else:
+        # §7: the user has two types; the submitted deployment is the drawn
+        # ``params``; the alternative type is an independent draw. The provider
+        # holds n_pseudo_obs observations of each type.
+        alt = sample_params(kq, cfg.priors, shape)
+        k1, k2 = jax.random.split(kb)
+        obs = sample_pseudo_observations(k1, params, cfg.priors, cfg.n_pseudo_obs)
+        obs_alt = sample_pseudo_observations(k2, alt, cfg.priors, cfg.n_pseudo_obs)
+        bel = apply_pseudo_observations(prior, obs, cfg.priors)
+        bel_alt = apply_pseudo_observations(prior, obs_alt, cfg.priors)
+    bel = observe_initial_size(bel, c0)
+    return ArrivalStream(params=params, c0=c0, bel=bel, bel_alt=bel_alt,
+                         n_arrivals=n_arr)
+
+
+def _init_state(cfg: SimConfig) -> SimState:
+    s = cfg.max_slots
+    zero_params = DeploymentParams(
+        lam=jnp.zeros(s), mu=jnp.full((s,), 1.0), sig=jnp.zeros(s)
+    )
+    return SimState(
+        alive=jnp.zeros(s, bool),
+        cores=jnp.zeros(s, jnp.float32),
+        params=zero_params,
+        bel=belief_from_prior(cfg.priors, (s,)),
+        core_hours=jnp.zeros(()),
+        fail_requests=jnp.zeros(()),
+        total_requests=jnp.zeros(()),
+        arr_accepted=jnp.zeros(()),
+        arr_rejected=jnp.zeros(()),
+        slot_overflow=jnp.zeros(()),
+    )
+
+
+def _place_arrivals(state: SimState, accept, stream_t: ArrivalStream, cfg: SimConfig):
+    """Place accepted arrivals into free slots (static unroll over A<=cap)."""
+    alive, cores = state.alive, state.cores
+    params, bel = state.params, state.bel
+    overflow = state.slot_overflow
+    for a in range(cfg.max_arrivals):
+        free = jnp.argmin(alive)  # first False (0 if none free -> check)
+        can = accept[a] & ~alive[free]
+        overflow = overflow + jnp.where(accept[a] & alive[free], 1.0, 0.0)
+        onehot = (jnp.arange(cfg.max_slots) == free) & can
+        alive = alive | onehot
+        cores = jnp.where(onehot, stream_t.c0[a], cores)
+        params = jax.tree.map(
+            lambda s_, n: jnp.where(onehot, n[a], s_), params, stream_t.params
+        )
+        bel = jax.tree.map(
+            lambda s_, n: jnp.where(onehot, n[a], s_), bel, stream_t.bel
+        )
+    return state._replace(alive=alive, cores=cores, params=params, bel=bel,
+                          slot_overflow=overflow)
+
+
+def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int):
+    """Build the jitted simulator for a fixed policy *kind* (threshold/rho stay
+    traced so tuning does not re-jit). Returns run(key, policy) -> RunMetrics."""
+    needs_moments = policy_kind != ZEROTH
+    grid = horizon_grid
+    n_grid = grid.shape[0] if needs_moments else 1
+    if cfg.use_kernel:
+        from ..kernels.moment_curves.ops import moment_curves_kernel
+
+        def curves_fn(bel, cores, grid_, priors, d_points):
+            flat_bel = jax.tree.map(lambda a: a.reshape(-1), bel)
+            out = moment_curves_kernel(flat_bel, cores.reshape(-1), grid_,
+                                       priors, d_points=d_points)
+            shape = cores.shape + (grid_.shape[0],)
+            return MomentCurves(out.EL.reshape(shape), out.VL.reshape(shape))
+    else:
+        curves_fn = moment_curves
+
+    def step(policy: PolicyParams, state: SimState, xs):
+        key, stream_t = xs
+        k_ev = key
+        alive_f = state.alive.astype(jnp.float32)
+
+        # 1. deaths ---------------------------------------------------------
+        ev = sample_step_events(k_ev, state.params, state.cores, cfg.priors, cfg.dt)
+        deaths = jnp.minimum(ev.core_deaths.astype(jnp.float32), state.cores) * alive_f
+        exposure = state.cores * cfg.dt * alive_f
+        cores = state.cores - deaths
+        cores = jnp.where(ev.spont_death & state.alive, 0.0, cores)
+        alive = state.alive & (cores > 0.0)
+        alive_f = alive.astype(jnp.float32)
+
+        # 2. scale-outs (only deployments still alive request) ---------------
+        req = ev.scaleout_cores.astype(jnp.float32) * alive_f
+        n_req = ev.n_scaleouts.astype(jnp.float32) * alive_f
+        util = jnp.sum(cores * alive_f)
+        grant = (util + jnp.cumsum(req)) <= cfg.capacity
+        cores = cores + jnp.where(grant, req, 0.0)
+        failed = jnp.sum(jnp.where(~grant, n_req, 0.0))
+        util = jnp.sum(cores * alive_f)
+
+        # 3. belief updates (requests are observed whether or not granted) ---
+        bel = update_on_events(
+            state.bel,
+            core_deaths=deaths,
+            exposure_core_hours=exposure,
+            n_scaleouts=n_req,
+            scaleout_cores=req,
+            alive_hours=cfg.dt * alive_f,
+            priors=cfg.priors,
+        )
+
+        # 4. arrivals ---------------------------------------------------------
+        valid = jnp.arange(cfg.max_arrivals) < stream_t.n_arrivals
+        if needs_moments:
+            slot_curves = curves_fn(bel, cores, grid, cfg.priors,
+                                    d_points=cfg.d_points)
+            agg_el = jnp.sum(slot_curves.EL * alive_f[:, None], axis=0)
+            agg_vl = jnp.sum(slot_curves.VL * alive_f[:, None], axis=0)
+            cand = curves_fn(stream_t.bel, stream_t.c0, grid, cfg.priors,
+                             d_points=cfg.d_points)
+            if cfg.prior_mode == MIX_UNLABELED:
+                cand_alt = curves_fn(stream_t.bel_alt, stream_t.c0, grid,
+                                     cfg.priors, d_points=cfg.d_points)
+                stacked = MomentCurves(
+                    EL=jnp.stack([cand.EL, cand_alt.EL]),
+                    VL=jnp.stack([cand.VL, cand_alt.VL]),
+                )
+                cand = mixture_moments(jnp.asarray([0.5, 0.5]), stacked)
+        else:
+            agg_el = jnp.zeros((n_grid,))
+            agg_vl = jnp.zeros((n_grid,))
+            cand = MomentCurves(EL=jnp.zeros((cfg.max_arrivals, n_grid)),
+                                VL=jnp.zeros((cfg.max_arrivals, n_grid)))
+
+        res = admit_sequential(policy, agg_el, agg_vl, util, cand,
+                               stream_t.c0, valid)
+        state = state._replace(alive=alive, cores=cores, bel=bel)
+        state = _place_arrivals(state, res.accept, stream_t, cfg)
+
+        n_acc = jnp.sum(res.accept.astype(jnp.float32))
+        n_rej = jnp.sum(valid.astype(jnp.float32)) - n_acc
+        util_end = jnp.sum(state.cores * state.alive.astype(jnp.float32))
+        state = state._replace(
+            core_hours=state.core_hours + util_end * cfg.dt,
+            fail_requests=state.fail_requests + failed,
+            total_requests=state.total_requests + jnp.sum(n_req),
+            arr_accepted=state.arr_accepted + n_acc,
+            arr_rejected=state.arr_rejected + n_rej,
+        )
+        return state, (util_end, failed)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def run(key: jax.Array, policy: PolicyParams,
+            stream: Optional[ArrivalStream] = None) -> RunMetrics:
+        k_stream, k_scan = jax.random.split(key)
+        if stream is None:
+            stream = draw_arrival_stream(k_stream, cfg)
+        keys = jax.random.split(k_scan, cfg.n_steps)
+        state0 = _init_state(cfg)
+        state, (util_trace, fail_trace) = jax.lax.scan(
+            functools.partial(step, policy), state0, (keys, stream)
+        )
+        return RunMetrics(
+            utilization=state.core_hours / (cfg.horizon_hours * cfg.capacity),
+            failure_rate=state.fail_requests / jnp.maximum(state.total_requests, 1.0),
+            total_requests=state.total_requests,
+            failed_requests=state.fail_requests,
+            arrivals_accepted=state.arr_accepted,
+            arrivals_rejected=state.arr_rejected,
+            slot_overflow=state.slot_overflow,
+            util_trace=util_trace,
+            fail_trace=fail_trace,
+        )
+
+    return run
+
+
+def run_batch(run_fn, key: jax.Array, policy: PolicyParams, n_runs: int) -> RunMetrics:
+    """vmap a batch of independent runs."""
+    keys = jax.random.split(key, n_runs)
+    return jax.vmap(lambda k: run_fn(k, policy))(keys)

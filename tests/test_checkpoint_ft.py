@@ -1,0 +1,174 @@
+"""Checkpointing (atomic, async, resharding restore) + fault tolerance +
+data pipeline + optimizer + compression tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer
+from repro.data.pipeline import PipelineConfig, Prefetcher, make_batch
+from repro.models import build_model, get_config, reduced_config
+from repro.optim.adamw import AdamWConfig, init_opt_state, apply_updates
+from repro.optim.compression import (compress_with_feedback,
+                                     init_error_feedback)
+from repro.runtime.fault_tolerance import (FailureInjector, StragglerWatchdog,
+                                           run_with_restarts)
+from repro.train.step import init_train_state, make_train_step
+
+
+@pytest.fixture()
+def small_state():
+    return {"w": jnp.arange(12.0).reshape(3, 4),
+            "b": {"x": jnp.ones(5), "step": jnp.asarray(7)}}
+
+
+class TestCheckpointer:
+    def test_roundtrip(self, tmp_path, small_state):
+        checkpointer.save(str(tmp_path), 3, small_state)
+        assert checkpointer.latest_step(str(tmp_path)) == 3
+        out = checkpointer.restore(str(tmp_path), 3, small_state)
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(small_state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_atomic_latest_pointer(self, tmp_path, small_state):
+        checkpointer.save(str(tmp_path), 1, small_state)
+        checkpointer.save(str(tmp_path), 2, small_state)
+        assert checkpointer.latest_step(str(tmp_path)) == 2
+        assert os.path.isdir(tmp_path / "step_1")  # older kept
+
+    def test_async_save(self, tmp_path, small_state):
+        ck = checkpointer.AsyncCheckpointer(str(tmp_path))
+        ck.save_async(5, small_state)
+        ck.wait()
+        assert checkpointer.latest_step(str(tmp_path)) == 5
+
+    def test_resharding_restore_to_host_mesh(self, tmp_path):
+        """Save an unsharded state, restore against explicit shardings —
+        the elastic-downsize path (mesh change = new shardings)."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        state = {"w": jnp.ones((8, 8))}
+        checkpointer.save(str(tmp_path), 1, state)
+        sh = {"w": NamedSharding(mesh, PartitionSpec("data", "model"))}
+        out = checkpointer.restore(str(tmp_path), 1, state, sh)
+        assert out["w"].sharding == sh["w"]
+
+
+class TestFaultTolerance:
+    def test_run_with_restarts_resumes(self, tmp_path):
+        """A loop that dies twice and resumes from its 'checkpoint'."""
+        progress = {"step": 0, "restarts": 0}
+        inj = FailureInjector(fail_at=(3, 7))
+
+        def loop(_):
+            for step in range(progress["step"], 10):
+                inj.maybe_fail(step)
+                progress["step"] = step + 1
+            return progress["step"]
+
+        final = run_with_restarts(
+            loop, max_restarts=3,
+            on_restart=lambda i, e: progress.__setitem__(
+                "restarts", progress["restarts"] + 1))
+        assert final == 10 and progress["restarts"] == 2
+
+    def test_injector_exhausts(self):
+        inj = FailureInjector(fail_at=(1,))
+        with pytest.raises(RuntimeError):
+            inj.maybe_fail(1)
+        inj.maybe_fail(1)  # second time: already fired
+
+    def test_straggler_watchdog(self):
+        wd = StragglerWatchdog(warmup_steps=2, straggler_factor=2.0)
+        for s in range(5):
+            assert not wd.observe(s, 1.0)
+        assert wd.observe(5, 5.0)
+        assert len(wd.events) == 1
+        assert not wd.observe(6, 1.0)  # ewma not polluted by the spike
+
+    def test_end_to_end_training_restart(self, tmp_path):
+        """Integration: train, crash, resume from checkpoint, finish —
+        final params identical to an uninterrupted run (data is a pure
+        function of step, checkpoint at the crash boundary)."""
+        cfg = reduced_config(get_config("llama3.2-1b"))
+        model = build_model(cfg)
+        opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=8)
+        step_fn = jax.jit(make_train_step(model, opt_cfg, None))
+        pipe_cfg = PipelineConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+
+        def run_to(state, start, end, ckpt_every=4):
+            for step in range(start, end):
+                state, _ = step_fn(state, make_batch(pipe_cfg, step))
+                if (step + 1) % ckpt_every == 0:
+                    checkpointer.save(str(tmp_path), step + 1, state)
+            return state
+
+        # uninterrupted
+        s0 = init_train_state(model, jax.random.PRNGKey(0))
+        ref = run_to(s0, 0, 8)
+        # interrupted at step 5 -> resume from checkpoint 4
+        s1 = init_train_state(model, jax.random.PRNGKey(0))
+        s1 = run_to(s1, 0, 5)
+        latest = checkpointer.latest_step(str(tmp_path))
+        assert latest == 4
+        s2 = checkpointer.restore(str(tmp_path), latest, ref)
+        s2 = run_to(s2, latest, 8)
+        for a, b in zip(jax.tree.leaves(ref.params), jax.tree.leaves(s2.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6)
+
+
+class TestPipeline:
+    def test_batch_deterministic_by_step(self):
+        cfg = PipelineConfig(vocab=100, seq_len=16, global_batch=2)
+        b1, b2 = make_batch(cfg, 3), make_batch(cfg, 3)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        b3 = make_batch(cfg, 4)
+        assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+    def test_labels_are_next_tokens(self):
+        cfg = PipelineConfig(vocab=100, seq_len=16, global_batch=2)
+        b = make_batch(cfg, 0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_prefetcher_produces_batches(self):
+        cfg = PipelineConfig(vocab=50, seq_len=8, global_batch=2)
+        pipe = Prefetcher(cfg)
+        b = next(pipe)
+        assert b["tokens"].shape == (2, 8)
+        pipe.close()
+
+
+class TestOptimizer:
+    def test_adamw_decreases_quadratic(self):
+        cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                          weight_decay=0.0)
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = init_opt_state(params)
+        for _ in range(60):
+            grads = {"w": 2.0 * params["w"]}
+            params, state, _ = apply_updates(cfg, params, grads, state)
+        assert float(jnp.abs(params["w"]).max()) < 1.0
+
+    def test_grad_clipping(self):
+        cfg = AdamWConfig(clip_norm=1.0, warmup_steps=0)
+        params = {"w": jnp.zeros(3)}
+        state = init_opt_state(params)
+        _, _, metrics = apply_updates(cfg, params, {"w": jnp.full(3, 1e6)},
+                                      state)
+        assert float(metrics["grad_norm"]) > 1e5  # norm reported pre-clip
+
+    def test_compression_error_feedback_preserves_sum(self):
+        """int8 quantization error is carried, not lost: across steps the
+        cumulative compressed gradient tracks the cumulative true gradient."""
+        g = {"w": jnp.linspace(-1.0, 1.0, 1000)}
+        ef = init_error_feedback(g)
+        total_c = jnp.zeros(1000)
+        for _ in range(20):
+            c, ef = compress_with_feedback(g, ef)
+            total_c = total_c + c["w"]
+        total_true = 20.0 * g["w"]
+        err = jnp.max(jnp.abs(total_c + ef.residual["w"] - total_true))
+        assert float(err) < 1e-3

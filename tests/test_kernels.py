@@ -1,0 +1,145 @@
+"""Per-kernel validation: shape/dtype sweeps against the ref.py pure-jnp
+oracles (interpret=True executes the kernel bodies on CPU), plus hypothesis
+property tests on the kernels' invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import AZURE_PRIORS
+from repro.core.belief import GammaBelief
+from repro.core.moments import moment_curves
+from repro.kernels.decode_gqa.ops import decode_gqa
+from repro.kernels.decode_gqa.ref import decode_gqa_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moment_curves.ops import moment_curves_kernel
+
+PRIORS = AZURE_PRIORS
+
+
+def _rand_belief(key, d):
+    ks = jax.random.split(key, 6)
+    e = lambda k, base: base * jnp.exp(jax.random.normal(k, (d,)))
+    return GammaBelief(
+        mu_a=e(ks[0], 0.31), mu_b=e(ks[1], 0.58), lam_a=e(ks[2], 0.49),
+        lam_b=e(ks[3], 0.45), sig_a=e(ks[4], 0.26), sig_b=e(ks[5], 0.055))
+
+
+class TestMomentCurvesKernel:
+    @pytest.mark.parametrize("d,n,nd", [(1, 8, 8), (37, 48, 32), (300, 33, 16),
+                                        (512, 64, 32)])
+    def test_matches_reference(self, d, n, nd):
+        key = jax.random.PRNGKey(d + n)
+        bel = _rand_belief(key, d)
+        cores = (1.0 + jax.random.poisson(key, 5.0, (d,))).astype(jnp.float32)
+        grid = jnp.exp(jnp.linspace(np.log(1.0), np.log(26_000.0), n)
+                       ).astype(jnp.float32)
+        ref = moment_curves(bel, cores, grid, PRIORS, d_points=nd)
+        got = moment_curves_kernel(bel, cores, grid, PRIORS, d_points=nd,
+                                   interpret=True)
+        np.testing.assert_allclose(got.EL, ref.EL, rtol=2e-4, atol=1e-5)
+        np.testing.assert_allclose(got.VL, ref.VL, rtol=2e-3, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           cores=st.integers(1, 500))
+    def test_property_nonnegative_finite(self, seed, cores):
+        key = jax.random.PRNGKey(seed)
+        bel = _rand_belief(key, 8)
+        c = jnp.full((8,), float(cores))
+        grid = jnp.asarray([1.0, 24.0, 720.0, 8760.0], jnp.float32)
+        out = moment_curves_kernel(bel, c, grid, PRIORS, d_points=8,
+                                   interpret=True)
+        assert bool(jnp.all(jnp.isfinite(out.EL)))
+        assert bool(jnp.all(jnp.isfinite(out.VL)))
+        assert bool(jnp.all(out.EL >= 0.0))
+        assert bool(jnp.all(out.VL >= -1e-5))
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,s,h,kvh,dh", [
+        (1, 128, 4, 4, 64), (2, 256, 8, 2, 64), (1, 512, 8, 8, 128),
+        (2, 384, 4, 1, 128),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_matches_ref(self, b, s, h, kvh, dh, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(s + h), 3)
+        q = jax.random.normal(ks[0], (b, s, h, dh), dtype)
+        k = jax.random.normal(ks[1], (b, s, kvh, dh), dtype)
+        v = jax.random.normal(ks[2], (b, s, kvh, dh), dtype)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        ref = attention_ref(q, k, v, causal=True)
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("window", [64, 256])
+    def test_sliding_window(self, window):
+        ks = jax.random.split(jax.random.PRNGKey(window), 3)
+        q = jax.random.normal(ks[0], (1, 384, 4, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 384, 2, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 384, 2, 64), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True)
+        ref = attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_property_rows_are_convex_combos(self, seed):
+        """Attention output lies in the convex hull of V rows: max |out| <=
+        max |V| per head (softmax weights sum to 1)."""
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(ks[0], (1, 128, 2, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(v))) + 1e-4
+
+
+class TestDecodeGQA:
+    @pytest.mark.parametrize("b,s,h,kvh,dh,length", [
+        (1, 128, 4, 4, 64, 128), (2, 300, 8, 4, 64, 250),
+        (1, 2048, 8, 1, 128, 1500), (4, 77, 4, 2, 64, 60),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, b, s, h, kvh, dh, length, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(s + length), 3)
+        q = jax.random.normal(ks[0], (b, h, dh), dtype)
+        k = jax.random.normal(ks[1], (b, s, kvh, dh), dtype)
+        v = jax.random.normal(ks[2], (b, s, kvh, dh), dtype)
+        out = decode_gqa(q, k, v, length, interpret=True)
+        ref = decode_gqa_ref(q, k, v, length)
+        tol = 3e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=tol, atol=tol)
+
+    def test_per_batch_lengths(self):
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        b, s = 3, 256
+        q = jax.random.normal(ks[0], (b, 4, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, 2, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, 2, 64), jnp.float32)
+        lengths = jnp.asarray([10, 200, 256], jnp.int32)
+        out = decode_gqa(q, k, v, lengths, interpret=True)
+        ref = decode_gqa_ref(q, k, v, lengths)
+        np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), length=st.integers(1, 256))
+    def test_property_padding_invariance(self, seed, length):
+        """Keys beyond `length` never affect the output."""
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q = jax.random.normal(ks[0], (1, 4, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+        out1 = decode_gqa(q, k, v, length, interpret=True)
+        noise = jax.random.normal(ks[3], (1, 256, 2, 64)) * 100.0
+        tail = jnp.arange(256)[None, :, None, None] >= length
+        k2 = jnp.where(tail, noise, k)
+        v2 = jnp.where(tail, noise, v)
+        out2 = decode_gqa(q, k2, v2, length, interpret=True)
+        np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)

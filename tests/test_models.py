@@ -1,0 +1,139 @@
+"""Per-arch smoke tests on REDUCED configs (assignment requirement): one
+forward/train step on CPU asserting output shapes + no NaNs, plus the
+serving-correctness property: decode-with-cache logits == full-forward logits
+at every position."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.shapes import SHAPES, applicable
+from repro.models import (ARCH_NAMES, build_model, get_config, input_specs,
+                          reduced_config)
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    kt, kf = jax.random.split(key)
+    tokens = jax.random.randint(kt, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens,
+             "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(kf, (B, cfg.enc_seq, cfg.d_model),
+                                            jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def models():
+    out = {}
+    for name in ARCH_NAMES:
+        cfg = reduced_config(get_config(name))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        out[name] = (cfg, model, params)
+    return out
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finite(models, name):
+    cfg, model, params = models[name]
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    if cfg.family == "audio":
+        logits = model.forward(params, batch)
+    else:
+        logits = model.forward(params, batch["tokens"])
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_loss_finite_and_decreases(models, name):
+    cfg, model, params = models[name]
+    batch = _batch(cfg, jax.random.PRNGKey(2))
+
+    loss_fn = lambda p: model.loss(p, batch)[0]
+    loss0, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss0))
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0.0
+    # one SGD step reduces the loss on the same batch
+    params2 = jax.tree.map(lambda p, g: p - 0.1 * g.astype(p.dtype),
+                           params, grads)
+    loss1 = loss_fn(params2)
+    assert float(loss1) < float(loss0)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_matches_forward(models, name):
+    """Teacher-forced decode through the cache reproduces full-forward logits."""
+    cfg, model, params = models[name]
+    batch = _batch(cfg, jax.random.PRNGKey(3))
+    tokens = batch["tokens"]
+    if cfg.family == "audio":
+        full = model.forward(params, batch)
+    else:
+        full = model.forward(params, tokens)
+
+    cache = model.init_cache(B, S, dtype=jnp.float32)
+    logits_steps = []
+    for t in range(S):
+        if cfg.family == "audio" and t == 0:
+            # encoder K/V enter the cache via prefill of the first token
+            step_logits, cache = model.prefill(params, tokens[:, :1],
+                                               frames=batch["frames"])
+            # re-pad self kv to S for subsequent decode steps
+            def pad(kv):
+                pad_len = S - kv.k.shape[1]
+                z = jnp.zeros((B, pad_len, *kv.k.shape[2:]), kv.k.dtype)
+                return kv._replace(k=jnp.concatenate([kv.k, z], 1),
+                                   v=jnp.concatenate([kv.v, z], 1))
+            cache = cache._replace(self_kv=[pad(kv) for kv in cache.self_kv])
+        else:
+            step_logits, cache = model.decode_step(params, tokens[:, t], cache)
+        logits_steps.append(step_logits)
+    dec = jnp.stack(logits_steps, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(full, dtype=np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+@pytest.mark.parametrize("name", ["hymba-1.5b", "xlstm-125m"])
+def test_prefill_then_decode_continues(models, name):
+    """prefill(prompt) + decode(next) == forward(prompt+next) at the last pos
+    for the sub-quadratic archs (cache = recurrent state + rolling window)."""
+    cfg, model, params = models[name]
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0, cfg.vocab)
+    full = model.forward(params, tokens)
+    logits_p, cache = model.prefill(params, tokens[:, : S - 1])
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(full[:, S - 2], dtype=np.float32),
+                               rtol=2e-2, atol=2e-2)
+    logits_d, _ = model.decode_step(params, tokens[:, S - 1], cache)
+    np.testing.assert_allclose(np.asarray(logits_d),
+                               np.asarray(full[:, S - 1], dtype=np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_long_500k_applicability():
+    runnable = [n for n in ARCH_NAMES
+                if applicable(get_config(n), SHAPES["long_500k"])[0]]
+    assert set(runnable) == {"hymba-1.5b", "xlstm-125m"}
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_input_specs_cover_all_shapes(name):
+    cfg = get_config(name)
+    for shape in SHAPES.values():
+        ok, _ = applicable(cfg, shape)
+        if not ok:
+            continue
+        specs = input_specs(cfg, shape)
+        assert "tokens" in specs
+        if shape.kind == "train":
+            assert specs["tokens"].shape == (shape.global_batch, shape.seq_len)
+        if cfg.family == "audio" and shape.kind != "decode":
+            assert specs["frames"].shape[1] == cfg.enc_seq

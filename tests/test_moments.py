@@ -1,0 +1,218 @@
+"""Validation of the closed-form moment curves (paper Props. 2/3/5).
+
+Three layers of evidence:
+  1. the discrete prefix-sum implementation == the naive O(N²) transcription
+  2. the Gamma-marginal integrals (_g/_h/_k incl. analytic continuation for
+     a+p < 0) == scipy quadrature
+  3. the conditional (fixed-parameter) process moments == event-level MC of
+     the true continuous-time process
+  4. point-mass beliefs reduce the marginal formulas to the conditional ones
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.integrate as si
+
+from repro.core import (AZURE_PRIORS, GammaBelief, belief_from_prior,
+                        moment_curves, moment_curves_discrete)
+from repro.core.moments import (_g, _h, _k, moment_curves_discrete_naive)
+
+PRIORS = AZURE_PRIORS
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _x64():
+    """x64 for the quadrature-grade checks, contained to this module so the
+    int32 paths of the rest of the suite are unaffected."""
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+def _quad_gamma(f, a, b):
+    """Integrate f(mu) * Gamma(a,b)-pdf with the x = mu^a substitution to tame
+    the mu^(a-1) singularity at 0."""
+    from math import gamma as G
+
+    def integrand(x):
+        mu = x ** (1.0 / a)
+        return f(mu) * b**a / G(a) * np.exp(-b * mu) / a
+
+    hi = (200.0 / b) ** a
+    val, _ = si.quad(integrand, 0.0, hi, limit=400)
+    return val
+
+
+class TestGammaIntegrals:
+    a, b = 0.3107, 0.5778
+
+    @pytest.mark.parametrize("p,t", [(0.0, 5.0), (0.673, 24.0), (1.346, 100.0)])
+    def test_g(self, p, t):
+        want = _quad_gamma(lambda mu: mu**p * np.exp(-t * mu), self.a, self.b)
+        got = float(_g(jnp.float64(self.a), jnp.float64(self.b), p, jnp.float64(t)))
+        assert got == pytest.approx(want, rel=1e-6)
+
+    @pytest.mark.parametrize("p,t", [(-0.327, 24.0), (-0.327, 480.0), (0.2, 6.0)])
+    def test_h_analytic_continuation(self, p, t):
+        # a + p = -0.0163 < 0 for p = nu - 1: the continuation case
+        want = _quad_gamma(lambda mu: mu**p * -np.expm1(-t * mu), self.a, self.b)
+        got = float(_h(jnp.float64(self.a), jnp.float64(self.b), p, jnp.float64(t)))
+        assert got == pytest.approx(want, rel=1e-6)
+
+    @pytest.mark.parametrize("p,t", [(-0.654, 24.0), (-0.654, 480.0), (0.1, 6.0)])
+    def test_k_analytic_continuation(self, p, t):
+        want = _quad_gamma(lambda mu: mu**p * np.expm1(-t * mu) ** 2, self.a, self.b)
+        got = float(_k(jnp.float64(self.a), jnp.float64(self.b), p, jnp.float64(t)))
+        assert got == pytest.approx(want, rel=1e-6)
+
+
+class TestPrefixSumVsNaive:
+    @pytest.mark.parametrize("n_steps,dt", [(8, 1.0), (24, 2.0), (50, 12.0)])
+    def test_discrete_matches_naive(self, n_steps, dt):
+        bel = belief_from_prior(PRIORS)
+        got = moment_curves_discrete(bel, jnp.asarray(5.0), n_steps, dt, PRIORS,
+                                     d_stride=1)
+        want = moment_curves_discrete_naive(bel, 5.0, n_steps, dt, PRIORS)
+        np.testing.assert_allclose(got.EL, want.EL, rtol=1e-5)
+        np.testing.assert_allclose(got.VL, want.VL, rtol=1e-5)
+
+    def test_posterior_belief_also_matches(self):
+        bel = GammaBelief(
+            mu_a=jnp.asarray(2.31), mu_b=jnp.asarray(40.0),
+            lam_a=jnp.asarray(3.49), lam_b=jnp.asarray(9.4),
+            sig_a=jnp.asarray(4.26), sig_b=jnp.asarray(3.05),
+        )
+        got = moment_curves_discrete(bel, jnp.asarray(17.0), 20, 4.0, PRIORS,
+                                     d_stride=1)
+        want = moment_curves_discrete_naive(bel, 17.0, 20, 4.0, PRIORS)
+        np.testing.assert_allclose(got.EL, want.EL, rtol=1e-5)
+        np.testing.assert_allclose(got.VL, want.VL, rtol=1e-5)
+
+
+def _point_mass_belief(lam, mu, sig, k=1e7):
+    """Gamma posteriors concentrated at the true parameters."""
+    arr = lambda v: jnp.asarray(v, jnp.float64)
+    return GammaBelief(mu_a=arr(mu * k), mu_b=arr(k),
+                       lam_a=arr(lam * k), lam_b=arr(k),
+                       sig_a=arr(sig * k), sig_b=arr(k))
+
+
+class TestConditionalProcessVsMC:
+    """Event-level MC of the continuous-time process at fixed parameters."""
+
+    lam, mu, sig = 0.5, 0.2, 2.0
+
+    def _mc(self, t, c0, lam=None, mu=None, sig=None, n_mc=400_000, seed=0):
+        lam = self.lam if lam is None else lam
+        mu = self.mu if mu is None else mu
+        sig = self.sig if sig is None else sig
+        nu, delta = PRIORS.nu, PRIORS.delta
+        rate = lam * mu**nu * t
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+        n_ev = jax.random.poisson(k1, rate, (n_mc,))
+        max_ev = int(np.percentile(np.asarray(n_ev), 100)) + 1
+        times = jax.random.uniform(k2, (n_mc, max_ev)) * t
+        sizes = 1 + jax.random.poisson(k3, sig, (n_mc, max_ev))
+        p = jnp.exp(-(t - times) * mu)
+        surv = jax.random.binomial(k4, sizes.astype(jnp.float64), p)
+        mask = jnp.arange(max_ev)[None, :] < n_ev[:, None]
+        q = jnp.sum(jnp.where(mask, surv, 0.0), axis=1)
+        b = jax.random.binomial(k5, float(c0), np.exp(-mu * t), (n_mc,))
+        m = jax.random.bernoulli(k6, np.exp(-delta * mu * t), (n_mc,))
+        return np.asarray(q), np.asarray(b), np.asarray(m)
+
+    def test_q_b_m_moments(self):
+        t, c0 = 24.0, 5
+        q, b, m = self._mc(t, c0)
+        nu = PRIORS.nu
+        eq_want = self.lam * self.mu**nu * (self.sig + 1) * -np.expm1(-t * self.mu) / self.mu
+        vq_want = self.lam * self.mu**nu * (
+            (self.sig + 1) * -np.expm1(-t * self.mu) / self.mu
+            + self.sig * (self.sig + 2) * -np.expm1(-2 * t * self.mu) / (2 * self.mu)
+        )
+        se = q.std() / np.sqrt(len(q))
+        assert q.mean() == pytest.approx(eq_want, abs=4 * se)
+        assert q.var() == pytest.approx(vq_want, rel=0.02)
+        p1 = np.exp(-self.mu * t)
+        assert b.mean() == pytest.approx(c0 * p1, rel=0.01)
+        assert b.var() == pytest.approx(c0 * p1 * (1 - p1), rel=0.03)
+        assert m.mean() == pytest.approx(np.exp(-PRIORS.delta * self.mu * t), rel=0.01)
+
+    def test_point_mass_belief_recovers_conditional(self):
+        """moment_curves at a point-mass belief == conditional closed forms.
+
+        Uses parameters with a large standing crop (lam(sig+1)mu^nu/mu ~ 50
+        cores) so the true zero-core death probability ~ 0 and the D-term is
+        ~ 1 — isolating the Q/B/M math from the D approximation.
+        """
+        lam, mu, sig = 5.0, 0.1, 4.0
+        t = jnp.asarray([6.0, 24.0, 96.0])
+        bel = _point_mass_belief(lam, mu, sig)
+        mc = moment_curves(bel, jnp.asarray(20.0), t, PRIORS, d_points=64)
+        nu, delta = PRIORS.nu, PRIORS.delta
+        tt = np.asarray(t)
+        eq = lam * mu**nu * (sig + 1) * -np.expm1(-tt * mu) / mu
+        eb = 20.0 * np.exp(-mu * tt)
+        em = np.exp(-delta * mu * tt)
+        el_want = em * (eq + eb)
+        np.testing.assert_allclose(np.asarray(mc.EL), el_want, rtol=0.05)
+
+    def test_full_l_against_mc(self):
+        """E[L]/V[L] of the full composed formula vs event-level MC at fixed
+        high-crop parameters (D ~ 1, isolating composition + Q/B/M)."""
+        lam, mu, sig = 5.0, 0.1, 4.0
+        t, c0 = 48.0, 20
+        q, b, m = self._mc(t, c0, lam=lam, mu=mu, sig=sig, n_mc=150_000)
+        l = m * (q + b)
+        bel = _point_mass_belief(lam, mu, sig)
+        mc = moment_curves(bel, jnp.asarray(float(c0)), jnp.asarray([t]), PRIORS,
+                           d_points=64)
+        assert float(mc.EL[0]) == pytest.approx(l.mean(), rel=0.10)
+        assert float(mc.VL[0]) == pytest.approx(l.var(), rel=0.25)
+
+    def test_d_term_behaviour(self):
+        """D-term sanity: in [0,1], decreasing, smaller for smaller/slower
+        deployments, ~1 for high-standing-crop deployments."""
+        from repro.core.moments import _d_curve_uniform
+
+        big = _d_curve_uniform(jnp.float64(1e7 * 0.1), jnp.float64(1e7),
+                               jnp.float64(25.0), jnp.float64(0.1**PRIORS.nu),
+                               jnp.float64(20.0), jnp.float64(4.0), 32,
+                               midpoint=True)
+        small = _d_curve_uniform(jnp.float64(1e7 * 0.5), jnp.float64(1e7),
+                                 jnp.float64(0.2), jnp.float64(0.5**PRIORS.nu),
+                                 jnp.float64(1.0), jnp.float64(4.0), 32,
+                                 midpoint=True)
+        for d in (big, small):
+            assert bool(jnp.all((d >= 0.0) & (d <= 1.0)))
+            assert bool(jnp.all(jnp.diff(d) <= 1e-12))
+        assert float(big[-1]) > 0.99
+        assert float(small[-1]) < 0.5
+
+
+class TestCurveShapeInvariants:
+    def test_batched_shapes_and_finiteness(self):
+        bel = belief_from_prior(PRIORS, (7,))
+        cores = jnp.arange(1.0, 8.0)
+        grid = jnp.asarray([1.0, 10.0, 100.0, 1000.0])
+        mc = moment_curves(bel, cores, grid, PRIORS, d_stride=2)
+        assert mc.EL.shape == (7, 4) and mc.VL.shape == (7, 4)
+        assert bool(jnp.all(jnp.isfinite(mc.EL))) and bool(jnp.all(jnp.isfinite(mc.VL)))
+        assert bool(jnp.all(mc.EL >= 0.0)) and bool(jnp.all(mc.VL >= 0.0))
+
+    def test_el_eventually_decays(self):
+        """Deployments die (M-process) so E[L_t] -> 0 for large t."""
+        bel = belief_from_prior(PRIORS)
+        grid = jnp.asarray([1.0, 24.0, 24.0 * 365 * 30])
+        mc = moment_curves(bel, jnp.asarray(100.0), grid, PRIORS, d_stride=1)
+        assert float(mc.EL[-1]) < 0.05 * float(mc.EL[0])
+
+    def test_d_stride_is_mild_approximation(self):
+        bel = belief_from_prior(PRIORS, (3,))
+        cores = jnp.asarray([1.0, 10.0, 100.0])
+        grid = jnp.exp(jnp.linspace(np.log(1.0), np.log(26_000.0), 32))
+        exact = moment_curves(bel, cores, grid, PRIORS, d_stride=1)
+        approx = moment_curves(bel, cores, grid, PRIORS, d_stride=4)
+        np.testing.assert_allclose(approx.EL, exact.EL, rtol=0.15, atol=1e-4)

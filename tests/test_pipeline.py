@@ -1,0 +1,55 @@
+"""GPipe pipeline parallelism: forward + gradient equivalence vs the
+sequential stack (runs in a subprocess with 8 virtual devices)."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(snippet: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", snippet], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stdout:{out.stdout}\nstderr:{out.stderr}"
+
+
+def test_pipeline_forward_and_grad_match_sequential():
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.train.pipeline import make_pipeline_forward, sequential_reference
+
+S, DATA = 4, 2
+mesh = jax.make_mesh((S, DATA), ('stage', 'data'))
+L, D, MB, M, T = 8, 16, 4, 6, 8   # 8 layers -> 2 per stage
+
+params = {
+    'w': jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * 0.2,
+    'b': jax.random.normal(jax.random.PRNGKey(1), (L, D)) * 0.1,
+}
+
+def stage_fn(p, x):  # apply this stage's layer chunk sequentially
+    def layer(carry, wb):
+        w, b = wb
+        return jnp.tanh(carry @ w + b), None
+    y, _ = jax.lax.scan(layer, x, (p['w'], p['b']))
+    return y
+
+x_mb = jax.random.normal(jax.random.PRNGKey(2), (M, MB, T, D))
+pipe = make_pipeline_forward(stage_fn, S, mesh)
+got = jax.jit(pipe)(params, x_mb)
+want = sequential_reference(stage_fn, S, params, x_mb)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                           rtol=2e-5, atol=2e-5)
+
+# gradient equivalence (backward streams through ppermute transposes)
+g1 = jax.grad(lambda p: jnp.sum(pipe(p, x_mb) ** 2))(params)
+g2 = jax.grad(lambda p: jnp.sum(
+    sequential_reference(stage_fn, S, p, x_mb) ** 2))(params)
+for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=5e-4, atol=5e-5)
+print('OK pipeline fwd+grad')
+""")

@@ -1,0 +1,152 @@
+"""Policy semantics (paper §4 definitions) + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AZURE_PRIORS, FIRST, SECOND, ZEROTH,
+                        belief_from_prior, decide, geometric_grid,
+                        admit_sequential, is_safe, make_policy,
+                        moment_curves, tune_threshold)
+from repro.core.moments import MomentCurves
+from repro.core.pomdp import cantelli_bound, failure_bound, markov_bound
+
+GRID_N = 8
+
+
+def _cand(el=5.0, vl=10.0):
+    return MomentCurves(EL=jnp.full((GRID_N,), el),
+                        VL=jnp.full((GRID_N,), vl))
+
+
+class TestDecide:
+    def test_zeroth_threshold_semantics(self):
+        pol = make_policy(ZEROTH, threshold=100.0, capacity=1000.0)
+        z = jnp.zeros(GRID_N)
+        ok = decide(pol, z, z, jnp.asarray(90.0), _cand(), jnp.asarray(9.0))
+        assert bool(ok)  # 99 < 100
+        ok = decide(pol, z, z, jnp.asarray(91.0), _cand(), jnp.asarray(9.0))
+        assert not bool(ok)  # 100 !< 100
+
+    def test_first_moment_checks_every_horizon_point(self):
+        pol = make_policy(FIRST, threshold=50.0, capacity=1000.0)
+        agg = jnp.zeros(GRID_N).at[3].set(48.0)
+        ok = decide(pol, agg, jnp.zeros(GRID_N), jnp.asarray(0.0),
+                    _cand(el=1.0), jnp.asarray(1.0))
+        assert bool(ok)
+        ok = decide(pol, agg, jnp.zeros(GRID_N), jnp.asarray(0.0),
+                    _cand(el=3.0), jnp.asarray(1.0))
+        assert not bool(ok)  # 48 + 3 > 50 at point 3
+
+    def test_second_moment_variance_sensitivity(self):
+        """Same mean, higher variance -> rejected (the paper's motivation
+        for the second-moment policy)."""
+        pol = make_policy(SECOND, rho=0.05, capacity=100.0)
+        agg_el = jnp.full((GRID_N,), 50.0)
+        lo = decide(pol, agg_el, jnp.full((GRID_N,), 10.0), jnp.asarray(50.0),
+                    _cand(el=5.0, vl=1.0), jnp.asarray(5.0))
+        hi = decide(pol, agg_el, jnp.full((GRID_N,), 10.0), jnp.asarray(50.0),
+                    _cand(el=5.0, vl=500.0), jnp.asarray(5.0))
+        assert bool(lo) and not bool(hi)
+
+    def test_capacity_is_hard_constraint(self):
+        pol = make_policy(ZEROTH, threshold=1e9, capacity=100.0)
+        z = jnp.zeros(GRID_N)
+        ok = decide(pol, z, z, jnp.asarray(95.0), _cand(), jnp.asarray(6.0))
+        assert not bool(ok)  # request itself does not fit
+
+    def test_marginal_heuristic_def4(self):
+        """A marginal candidate (E[L_n] < 1e-5 everywhere) is admitted even
+        when the base condition fails."""
+        agg = jnp.full((GRID_N,), 1e6)  # wildly unsafe
+        base = make_policy(SECOND, rho=0.01, capacity=1000.0)
+        marg = make_policy(SECOND, rho=0.01, capacity=1000.0, marginal=True)
+        cand = _cand(el=1e-6, vl=1e-9)
+        assert not bool(decide(base, agg, agg, jnp.asarray(10.0), cand,
+                               jnp.asarray(1.0)))
+        assert bool(decide(marg, agg, agg, jnp.asarray(10.0), cand,
+                           jnp.asarray(1.0)))
+
+
+class TestAdmitSequential:
+    def test_greedy_order_and_aggregate_update(self):
+        pol = make_policy(FIRST, threshold=10.0, capacity=100.0)
+        cands = MomentCurves(EL=jnp.full((3, GRID_N), 4.0),
+                             VL=jnp.zeros((3, GRID_N)))
+        res = admit_sequential(pol, jnp.zeros(GRID_N), jnp.zeros(GRID_N),
+                               jnp.asarray(0.0), cands,
+                               jnp.asarray([1.0, 1.0, 1.0]),
+                               jnp.asarray([True, True, True]))
+        # 4 + 4 <= 10 but 12 > 10: first two admitted
+        assert res.accept.tolist() == [True, True, False]
+        assert float(res.agg_el[0]) == pytest.approx(8.0)
+        assert float(res.util) == pytest.approx(2.0)
+
+    def test_invalid_slots_skipped(self):
+        pol = make_policy(FIRST, threshold=10.0, capacity=100.0)
+        cands = MomentCurves(EL=jnp.full((2, GRID_N), 4.0),
+                             VL=jnp.zeros((2, GRID_N)))
+        res = admit_sequential(pol, jnp.zeros(GRID_N), jnp.zeros(GRID_N),
+                               jnp.asarray(0.0), cands,
+                               jnp.asarray([1.0, 1.0]),
+                               jnp.asarray([False, True]))
+        assert res.accept.tolist() == [False, True]
+
+
+class TestBounds:
+    @settings(max_examples=50, deadline=None)
+    @given(el=st.floats(0.1, 500.0), vl=st.floats(0.0, 1e4),
+           c=st.floats(1.0, 1e3))
+    def test_bounds_are_probabilities_and_ordered(self, el, vl, c):
+        m = float(markov_bound(jnp.asarray(el), c))
+        ca = float(cantelli_bound(jnp.asarray(el), jnp.asarray(vl), c))
+        f = float(failure_bound(jnp.asarray(el), jnp.asarray(vl), c))
+        assert 0.0 <= ca <= 1.0
+        assert f <= m + 1e-9 and f <= ca + 1e-9
+
+    def test_cantelli_tightens_with_slack(self):
+        vl = jnp.asarray(100.0)
+        b1 = float(cantelli_bound(jnp.asarray(50.0), vl, 100.0))
+        b2 = float(cantelli_bound(jnp.asarray(90.0), vl, 100.0))
+        assert b1 < b2
+
+
+class TestSafety:
+    def test_is_safe_matches_policy_condition(self):
+        pol = make_policy(SECOND, rho=0.1, capacity=100.0)
+        safe = is_safe(pol, jnp.full((GRID_N,), 10.0), jnp.full((GRID_N,), 1.0))
+        unsafe = is_safe(pol, jnp.full((GRID_N,), 99.0),
+                         jnp.full((GRID_N,), 500.0))
+        assert bool(safe) and not bool(unsafe)
+
+
+class TestTuning:
+    def test_binary_search_monotone_target(self):
+        # failure rate monotone in threshold: recover the crossing point
+        crossing = 0.37
+        f = lambda t: 0.0 if t <= crossing else (t - crossing)
+        t = tune_threshold(f, 0.0, 1.0, target_sla=0.01, iters=20)
+        assert t == pytest.approx(crossing + 0.01, abs=1e-3)
+
+
+class TestPolicyOnRealCurves:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_monotonicity_more_load_never_more_admission(self, seed):
+        """Property: if a candidate is rejected at aggregate load X it stays
+        rejected at any aggregate load >= X (same shape)."""
+        key = jax.random.PRNGKey(seed)
+        bel = belief_from_prior(AZURE_PRIORS, (4,))
+        cores = 1.0 + jax.random.poisson(key, 10.0, (4,)).astype(jnp.float32)
+        grid = geometric_grid(6.0, 26_280.0, GRID_N)
+        curves = moment_curves(bel, cores, grid, AZURE_PRIORS)
+        agg_el = jnp.sum(curves.EL, 0)
+        agg_vl = jnp.sum(curves.VL, 0)
+        pol = make_policy(SECOND, rho=0.1, capacity=200.0)
+        cand = MomentCurves(curves.EL[0], curves.VL[0])
+        c0 = cores[0]
+        low = decide(pol, agg_el, agg_vl, jnp.asarray(10.0), cand, c0)
+        high = decide(pol, agg_el * 2.0, agg_vl * 2.0, jnp.asarray(10.0),
+                      cand, c0)
+        assert bool(high) <= bool(low)

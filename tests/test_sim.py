@@ -1,0 +1,151 @@
+"""Simulator invariants + importance sampling + pricing + metrics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AZURE_PRIORS, FIRST, SECOND, ZEROTH, geometric_grid,
+                        make_policy)
+from repro.core.moments import MomentCurves
+from repro.core.pricing import (mixture_moments, mixture_variance_excess,
+                                payment)
+from repro.sim import (MIX_UNLABELED, PSEUDO, SimConfig, badness_measure,
+                       bca_ci, make_importance_plan, make_run, rejection_q,
+                       sla_failure_rate)
+
+CFG = SimConfig(capacity=500.0, arrival_rate=0.05, horizon_hours=60 * 24.0,
+                dt=24.0, max_slots=128, max_arrivals=4, priors=AZURE_PRIORS)
+GRID = geometric_grid(24.0, 3 * 60 * 24.0, 16)
+
+
+@pytest.fixture(scope="module")
+def zeroth_run():
+    return make_run(CFG, GRID, ZEROTH)
+
+
+class TestSimulatorInvariants:
+    def test_capacity_never_exceeded(self, zeroth_run):
+        pol = make_policy(ZEROTH, threshold=1e9, capacity=CFG.capacity)
+        m = zeroth_run(jax.random.PRNGKey(0), pol)
+        assert float(jnp.max(m.util_trace)) <= CFG.capacity + 1e-6
+
+    def test_deterministic_given_seed(self, zeroth_run):
+        pol = make_policy(ZEROTH, threshold=300.0, capacity=CFG.capacity)
+        m1 = zeroth_run(jax.random.PRNGKey(3), pol)
+        m2 = zeroth_run(jax.random.PRNGKey(3), pol)
+        assert float(m1.utilization) == float(m2.utilization)
+        assert float(m1.failed_requests) == float(m2.failed_requests)
+
+    def test_zero_threshold_admits_nothing(self, zeroth_run):
+        pol = make_policy(ZEROTH, threshold=0.0, capacity=CFG.capacity)
+        m = zeroth_run(jax.random.PRNGKey(1), pol)
+        assert float(m.utilization) == 0.0
+        assert float(m.arrivals_accepted) == 0.0
+
+    def test_failure_accounting_consistent(self, zeroth_run):
+        pol = make_policy(ZEROTH, threshold=1e9, capacity=CFG.capacity)
+        m = zeroth_run(jax.random.PRNGKey(4), pol)
+        assert float(m.failed_requests) <= float(m.total_requests)
+        assert float(m.failure_rate) <= 1.0
+        assert float(jnp.sum(m.fail_trace)) == pytest.approx(
+            float(m.failed_requests))
+
+    def test_threshold_monotone_in_utilization(self, zeroth_run):
+        utils = []
+        for t in (100.0, 300.0, 500.0):
+            pol = make_policy(ZEROTH, threshold=t, capacity=CFG.capacity)
+            m = jax.vmap(lambda k: zeroth_run(k, pol))(
+                jax.random.split(jax.random.PRNGKey(0), 4))
+            utils.append(float(jnp.mean(m.utilization)))
+        assert utils[0] <= utils[1] <= utils[2]
+
+    def test_moment_policy_runs_with_pseudo_obs(self):
+        cfg = CFG._replace(prior_mode=PSEUDO, n_pseudo_obs=5)
+        run = make_run(cfg, GRID, SECOND)
+        pol = make_policy(SECOND, rho=0.2, capacity=cfg.capacity,
+                          marginal=True)
+        m = run(jax.random.PRNGKey(0), pol)
+        assert 0.0 <= float(m.utilization) <= 1.0
+
+    def test_mixture_mode_runs(self):
+        cfg = CFG._replace(prior_mode=MIX_UNLABELED, n_pseudo_obs=5)
+        run = make_run(cfg, GRID, SECOND)
+        pol = make_policy(SECOND, rho=0.2, capacity=cfg.capacity)
+        m = run(jax.random.PRNGKey(0), pol)
+        assert 0.0 <= float(m.utilization) <= 1.0
+
+
+class TestImportanceSampling:
+    def test_rejection_q_is_distribution_paper_params(self):
+        q = rejection_q([0.5699, 0.4121, 0.018], [0.5369, 0.8816, 0.0])
+        assert q.sum() == pytest.approx(1.0, abs=1e-9)
+        assert (q >= 0).all()
+        # oversamples the bad tail: bucket-3 mass rises from 1.8% to ~17%
+        assert q[2] > 0.018 * 5
+
+    def test_rejection_q_no_redraw_is_identity(self):
+        p = [0.7, 0.2, 0.1]
+        q = rejection_q(p, [0.0, 0.0, 0.0])
+        np.testing.assert_allclose(q, p, atol=1e-12)
+
+    def test_badness_measure_finite_and_reproducible(self):
+        bm1 = badness_measure(jax.random.PRNGKey(5), CFG, GRID)
+        bm2 = badness_measure(jax.random.PRNGKey(5), CFG, GRID)
+        assert float(bm1) == float(bm2) and np.isfinite(float(bm1))
+
+    def test_plan_weights_sum_to_one(self):
+        plan = make_importance_plan(jax.random.PRNGKey(0), CFG, GRID,
+                                    quotas=(4, 4, 4), n_probe=64,
+                                    probe_batch=32)
+        assert plan.weights.sum() == pytest.approx(plan.p_bucket[
+            np.unique(plan.buckets)].sum(), abs=1e-6)
+        assert len(plan.keys) == len(plan.weights)
+
+
+class TestPricing:
+    @settings(max_examples=50, deadline=None)
+    @given(e1=st.floats(0.0, 100.0), e2=st.floats(0.0, 100.0),
+           v1=st.floats(0.0, 100.0), v2=st.floats(0.0, 100.0),
+           p=st.floats(0.01, 0.99))
+    def test_prop4_mixture_variance_excess_nonneg(self, e1, e2, v1, v2, p):
+        """Prop. 4 / law of total variance: Var(mix) >= weighted Var."""
+        w = jnp.asarray([p, 1 - p])
+        excess = mixture_variance_excess(w, jnp.asarray([e1, e2]),
+                                         jnp.asarray([v1, v2]))
+        assert float(excess) >= -1e-6
+
+    def test_mixture_moments_exact(self):
+        curves = MomentCurves(EL=jnp.asarray([[2.0], [6.0]]),
+                              VL=jnp.asarray([[1.0], [3.0]]))
+        mix = mixture_moments(jnp.asarray([0.5, 0.5]), curves)
+        assert float(mix.EL[0]) == pytest.approx(4.0)
+        # E[V] + V[E] = 2 + 4 = 6
+        assert float(mix.VL[0]) == pytest.approx(6.0)
+
+    def test_labeling_lowers_payment(self):
+        # two types with different variances: mixture pays more (Cor. 2)
+        v = jnp.asarray([1.0, 9.0])
+        e = jnp.asarray([2.0, 10.0])
+        w = jnp.asarray([0.5, 0.5])
+        mix_var = float(jnp.sum(w * (v + e**2)) - jnp.sum(w * e) ** 2)
+        labeled = float(jnp.sum(w * jax.vmap(
+            lambda vv: payment(jnp.asarray(5.0), vv))(v)))
+        unlabeled = float(payment(jnp.asarray(5.0), jnp.asarray(mix_var)))
+        assert labeled < unlabeled
+
+
+class TestMetrics:
+    def test_bca_ci_covers_mean(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(10.0, 2.0, size=100)
+        ci = bca_ci(x, n_resamples=2_000)
+        assert ci.lo < x.mean() < ci.hi
+        assert ci.estimate == pytest.approx(x.mean())
+
+    def test_weighted_sla_rate(self):
+        rate = sla_failure_rate(np.asarray([0.0, 10.0]),
+                                np.asarray([100.0, 100.0]),
+                                weights=np.asarray([0.9, 0.1]))
+        assert rate == pytest.approx(1.0 / 110.0 * ... if False else
+                                     (0.1 * 10) / (0.9 * 100 + 0.1 * 100))
