@@ -6,10 +6,15 @@ Prints ``name,us_per_call,derived`` CSV. Scale presets (see common.SCALES):
   full            the paper's c=20,000 / 3-year / SLA 1e-4 setting
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--scale tiny] [--only table2]
+                                               [--json BENCH_tiny.json]
+
+``--json`` additionally records the rows (plus scale/seed metadata) to a
+JSON file, so speedups land in a committable BENCH_<scale>.json artifact.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -32,20 +37,33 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated module subset: " + ",".join(MODULES))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows to a BENCH_<scale>.json artifact")
     args = ap.parse_args()
 
     names = list(MODULES) if not args.only else args.only.split(",")
     print("name,us_per_call,derived")
     t0 = time.time()
+    records = []
     for name in names:
         mod = MODULES[name]
         try:
             for row in mod.run(args.scale, args.seed):
                 print(row, flush=True)
+                bench, us, derived = row.split(",", 2)
+                records.append({"name": bench, "us_per_call": float(us),
+                                "derived": derived})
         except Exception as e:  # pragma: no cover
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             raise
-    print(f"# total_seconds={time.time() - t0:.0f}", file=sys.stderr)
+    total = time.time() - t0
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"scale": args.scale, "seed": args.seed,
+                       "total_seconds": round(total, 1), "rows": records},
+                      f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    print(f"# total_seconds={total:.0f}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,53 @@
+"""Version-compatibility shims for the jax API surface this repo uses.
+
+The codebase targets the modern ``jax.shard_map`` entry point (jax >= 0.6);
+the pinned toolchain ships jax 0.4.37, where shard_map still lives in
+``jax.experimental.shard_map`` and the replication-checking flag is named
+``check_rep`` instead of ``check_vma``. Every shard_map call site routes
+through :func:`shard_map` below so the rest of the code is written once
+against the new API.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+else:  # jax < 0.6: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_ACCEPTED = frozenset(
+    inspect.signature(_shard_map_impl).parameters
+)
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_vma: bool | None = None, **kwargs: Any) -> Callable:
+    """``jax.shard_map`` with the new-API signature on every supported jax.
+
+    ``check_vma`` (new name) is translated to ``check_rep`` (old name) when
+    the installed implementation predates the rename; both names disable the
+    same replication/varying-mesh-axes check.
+    """
+    if check_vma is not None:
+        if "check_vma" in _ACCEPTED:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in _ACCEPTED:
+            kwargs["check_rep"] = check_vma
+        # else: the flag vanished entirely; the default behaviour is fine.
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas-TPU compiler params across the 0.4.x -> 0.6 rename
+    (``TPUCompilerParams`` became ``CompilerParams``)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -13,7 +13,8 @@ from .processes import (AZURE_PRIORS, DeploymentParams, PopulationPriors,
                         sample_pseudo_observations, sample_initial_size)
 from .belief import (GammaBelief, belief_from_prior, update_on_events,
                      apply_pseudo_observations, observe_initial_size)
-from .moments import MomentCurves, moment_curves, moment_curves_discrete
+from .moments import (MomentCurves, aggregate_moment_curves, moment_curves,
+                      moment_curves_discrete, moment_curves_fused)
 from .policies import (ZEROTH, FIRST, SECOND, PolicyParams, make_policy,
                        geometric_grid, paper_cascade, decide, admit_sequential,
                        is_safe, tune_threshold)
@@ -24,7 +25,8 @@ __all__ = [
     "sample_step_events", "scaleout_rate", "sample_pseudo_observations",
     "sample_initial_size", "GammaBelief", "belief_from_prior",
     "update_on_events", "apply_pseudo_observations", "observe_initial_size",
-    "MomentCurves", "moment_curves", "moment_curves_discrete", "ZEROTH",
+    "MomentCurves", "aggregate_moment_curves", "moment_curves",
+    "moment_curves_discrete", "moment_curves_fused", "ZEROTH",
     "FIRST", "SECOND", "PolicyParams", "make_policy", "geometric_grid",
     "paper_cascade", "decide", "admit_sequential", "is_safe",
     "tune_threshold", "pomdp", "pricing",

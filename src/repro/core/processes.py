@@ -81,6 +81,112 @@ def sample_scaleout_size(key: jax.Array, params: DeploymentParams) -> jax.Array:
     return 1 + jax.random.poisson(key, params.sig)
 
 
+# ---------------------------------------------------------------------------
+# Fast hybrid samplers for the simulator hot loop.
+#
+# jax.random.poisson / binomial run Knuth/rejection while-loops whose cost is
+# set by the *slowest lane*; with heavy-tailed rates (lam * mu^nu spans 5+
+# orders of magnitude across slots) nearly every step pays the worst case.
+# The hybrids below draw the small-parameter lanes by CDF inversion from a
+# single uniform (exact up to a < 1e-9 tail truncation) and route only the
+# heavy lanes through the library sampler, whose loops then terminate in a
+# few iterations because the small lanes are masked to zero.
+# ---------------------------------------------------------------------------
+
+_POIS_RMAX = 10.0   # inversion below jax's Knuth/rejection switch-over, so
+                    # the library call's Knuth loop sees only zero lanes and
+                    # exits immediately; P(Pois(10) > 42) ~ 6e-13
+_POIS_KMAX = 42
+_BIN_NMAX = 32.0    # inversion for n <= NMAX and p bounded away from 1
+_BIN_PMAX = 0.95
+
+
+def _poisson_ptrs(key: jax.Array, lam: jax.Array, active: jax.Array,
+                  max_iters: int = 64) -> jax.Array:
+    """Hörmann's transformed rejection (PTRS) for lam > 10.
+
+    Lanes with ``active=False`` start accepted at 0, so the while-loop count
+    is driven by the (typically few) genuinely heavy lanes — unlike the
+    library sampler, which runs its rejection loop with a fake large rate for
+    every small lane.
+    """
+    lam_s = jnp.where(active, lam, 100.0)
+    log_lam = jnp.log(lam_s)
+    b = 0.931 + 2.53 * jnp.sqrt(lam_s)
+    a = -0.059 + 0.02483 * b
+    inv_alpha = 1.1239 + 1.1328 / (b - 3.4)
+    v_r = 0.9277 - 3.6224 / (b - 2.0)
+
+    def body(carry):
+        i, k_out, accepted, rng = carry
+        rng, k0, k1 = jax.random.split(rng, 3)
+        u = jax.random.uniform(k0, lam.shape) - 0.5
+        v = jax.random.uniform(k1, lam.shape)
+        us = 0.5 - jnp.abs(u)
+        k = jnp.floor((2.0 * a / us + b) * u + lam_s + 0.43)
+        s = jnp.log(v * inv_alpha / (a / (us * us) + b))
+        t = -lam_s + k * log_lam - jax.lax.lgamma(k + 1.0)
+        accept1 = (us >= 0.07) & (v <= v_r)
+        reject = (k < 0.0) | ((us < 0.013) & (v > us))
+        accept = accept1 | (~reject & (s <= t))
+        k_out = jnp.where(~accepted & accept, k, k_out)
+        return i + 1, k_out, accepted | accept, rng
+
+    def cond(carry):
+        i, _, accepted, _ = carry
+        return jnp.any(~accepted) & (i < max_iters)
+
+    init = (0, jnp.zeros_like(lam), ~active, key)
+    return jax.lax.while_loop(cond, body, init)[1]
+
+
+def fast_poisson(key: jax.Array, lam: jax.Array) -> jax.Array:
+    """Poisson(lam) draws, float32; exact hybrid inversion/PTRS sampler."""
+    k1, k2 = jax.random.split(key)
+    small = lam <= _POIS_RMAX
+    lam_s = jnp.where(small, lam, 0.0)
+    u = jax.random.uniform(k1, lam.shape)
+    pmf = jnp.exp(-lam_s)
+    cdf = pmf
+    k = jnp.zeros_like(lam)
+    for j in range(1, _POIS_KMAX + 1):
+        pmf = pmf * (lam_s / j)
+        k = jnp.where(u > cdf, k + 1.0, k)
+        cdf = cdf + pmf
+    big = _poisson_ptrs(k2, lam, ~small)
+    return jnp.where(small, k, big)
+
+
+def fast_binomial(key: jax.Array, n: jax.Array, p: jax.Array) -> jax.Array:
+    """Binomial(n, p) draws, float32; exact hybrid inversion/library sampler.
+
+    Inversion iterates the pmf recurrence p_{j+1} = p_j (n-j)/(j+1) p/(1-p),
+    so lanes with p ~ 1 (or large n) go through the library sampler instead.
+    """
+    k1, k2 = jax.random.split(key)
+    n = n.astype(jnp.float32)
+    # the inversion starts from pmf(0) = (1-p)^n; lanes where that would
+    # underflow float32 (n log1p(-p) < ~-87, e.g. n~32 with p~0.95) would
+    # deterministically return n — route them through the library sampler
+    small = ((n <= _BIN_NMAX) & (p <= _BIN_PMAX)
+             & (n * jnp.log1p(-jnp.minimum(p, _BIN_PMAX)) > -80.0))
+    n_s = jnp.where(small, n, 0.0)
+    p_s = jnp.where(small, p, 0.0)
+    odds = p_s / (1.0 - p_s)
+    u = jax.random.uniform(k1, jnp.broadcast_shapes(n.shape, p.shape))
+    pmf = jnp.exp(n_s * jnp.log1p(-p_s))
+    cdf = pmf
+    k = jnp.zeros_like(n_s)
+    kmax = int(_BIN_NMAX)
+    for j in range(kmax):
+        pmf = pmf * ((n_s - j) / (j + 1.0) * odds)
+        pmf = jnp.maximum(pmf, 0.0)  # (n-j) < 0 once j >= n: pmf stays 0
+        k = jnp.where(u > cdf, k + 1.0, k)
+        cdf = cdf + pmf
+    big = jax.random.binomial(k2, jnp.where(small, 0.0, n), p)
+    return jnp.where(small, jnp.minimum(k, n_s), big.astype(jnp.float32))
+
+
 class StepEvents(NamedTuple):
     """Events for one discretized step of length dt hours (per deployment)."""
 
@@ -96,6 +202,7 @@ def sample_step_events(
     cores: jax.Array,
     priors: PopulationPriors,
     dt: float,
+    alive: jax.Array | None = None,
 ) -> StepEvents:
     """Sample one simulator step of the memoryless processes.
 
@@ -103,13 +210,20 @@ def sample_step_events(
     * spontaneous death w.p.   1 - exp(-delta*mu*dt)        (memoryless => exact)
     * scale-outs ~ Poisson(lam * mu**nu * dt); total size = k + Poisson(k*sig)
       (a sum of k iid (1 + Poisson(sig)) draws).
+
+    ``alive`` (optional bool mask) zeroes the event *rates* of dead slots
+    before sampling. The simulator discards dead slots' events anyway, so
+    this changes nothing downstream — but it keeps stale heavy-tailed
+    parameters in dead slots from driving the samplers' worst-case cost.
     """
     kd, ks, ko, kz = jax.random.split(key, 4)
+    alive_f = 1.0 if alive is None else alive.astype(jnp.float32)
     p_die = -jnp.expm1(-params.mu * dt)
-    core_deaths = jax.random.binomial(kd, cores.astype(jnp.float32), p_die).astype(cores.dtype)
+    core_deaths = fast_binomial(kd, cores.astype(jnp.float32) * alive_f,
+                                p_die).astype(cores.dtype)
     spont_death = jax.random.bernoulli(ks, -jnp.expm1(-priors.delta * params.mu * dt))
-    n_scaleouts = jax.random.poisson(ko, scaleout_rate(params, priors) * dt)
-    extra = jax.random.poisson(kz, n_scaleouts * params.sig)
+    n_scaleouts = fast_poisson(ko, scaleout_rate(params, priors) * dt * alive_f)
+    extra = fast_poisson(kz, n_scaleouts * params.sig)
     scaleout_cores = n_scaleouts + extra
     return StepEvents(core_deaths, spont_death, n_scaleouts, scaleout_cores)
 

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...compat import tpu_compiler_params
+
 DEFAULT_BK = 512
 NEG_INF = -1e30
 
@@ -91,7 +93,7 @@ def decode_gqa_grouped(q, k, v, lengths, *, bk=DEFAULT_BK, interpret=False):
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

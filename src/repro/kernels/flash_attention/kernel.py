@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...compat import tpu_compiler_params
+
 DEFAULT_BQ = 256
 DEFAULT_BK = 256
 NEG_INF = -1e30
@@ -115,7 +117,7 @@ def flash_attention_bhsd(q, k, v, *, causal=True, window=0,
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),

@@ -27,15 +27,14 @@ from jax.experimental import pallas as pl
 
 BLOCK_D = 256
 
-# packed parameter columns
-(A, B, C0, EU, EU2, EL_, ES1, ESS2, RH1, Z1, RK, Z2, EMUNU, DELTA, _PAD1,
- _PAD2) = range(16)
+# packed parameter columns (ALIVE is consumed only by the aggregate variant)
+(A, B, C0, EU, EU2, EL_, ES1, ESS2, RH1, Z1, RK, Z2, EMUNU, DELTA, ALIVE,
+ _PAD) = range(16)
 N_COLS = 16
 
 
-def _kernel(params_ref, t_ref, tc_ref, tau_ref, tril_ref, w_ref,
-            el_ref, vl_ref):
-    p = params_ref[...].astype(jnp.float32)          # [D, 16]
+def _curve_block(p, t_ref, tc_ref, tau_ref, tril_ref, w_ref):
+    """Shared kernel body: EL/VL [D, N] for one block of packed params."""
     col = lambda i: p[:, i][:, None]                 # [D, 1]
     a, b, c = col(A), col(B), col(C0)
     eu, eu2, el, es1, ess2 = col(EU), col(EU2), col(EL_), col(ES1), col(ESS2)
@@ -90,8 +89,34 @@ def _kernel(params_ref, t_ref, tc_ref, tau_ref, tril_ref, w_ref,
     vr = vq + vb
     edr = ed * er
     vdr = vd * vr + vd * er * er + ed * ed * vr
-    el_ref[...] = em * edr
-    vl_ref[...] = vm * vdr + vm * edr * edr + em * em * vdr
+    return em * edr, vm * vdr + vm * edr * edr + em * em * vdr
+
+
+def _kernel(params_ref, t_ref, tc_ref, tau_ref, tril_ref, w_ref,
+            el_ref, vl_ref):
+    p = params_ref[...].astype(jnp.float32)          # [D, 16]
+    el, vl = _curve_block(p, t_ref, tc_ref, tau_ref, tril_ref, w_ref)
+    el_ref[...] = el
+    vl_ref[...] = vl
+
+
+def _agg_kernel(params_ref, t_ref, tc_ref, tau_ref, tril_ref, w_ref,
+                el_ref, vl_ref):
+    """Aggregated-output variant: the [BLOCK_D, N] curve block never leaves
+    VMEM — each program masks dead slots (ALIVE column) and accumulates its
+    partial sums into the shared [1, N] outputs across sequential grid
+    steps."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        el_ref[...] = jnp.zeros_like(el_ref)
+        vl_ref[...] = jnp.zeros_like(vl_ref)
+
+    p = params_ref[...].astype(jnp.float32)          # [D, 16]
+    el, vl = _curve_block(p, t_ref, tc_ref, tau_ref, tril_ref, w_ref)
+    mask = p[:, ALIVE][:, None]
+    el_ref[...] += jnp.sum(el * mask, axis=0, keepdims=True)
+    vl_ref[...] += jnp.sum(vl * mask, axis=0, keepdims=True)
 
 
 @functools.partial(jax.jit, static_argnames=("nd", "interpret"))
@@ -123,6 +148,44 @@ def moment_curves_packed(params: jax.Array, t_grid: jax.Array,
         out_shape=[
             jax.ShapeDtypeStruct((d, n), jnp.float32),
             jax.ShapeDtypeStruct((d, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(params, t_grid, tc, tau, tril, w_interp)
+
+
+@functools.partial(jax.jit, static_argnames=("nd", "interpret"))
+def moment_curves_agg_packed(params: jax.Array, t_grid: jax.Array,
+                             tc: jax.Array, tau: jax.Array,
+                             w_interp: jax.Array, *, nd: int,
+                             interpret: bool = False):
+    """Aggregate (sum over rows with ALIVE=1) moment curves.
+
+    Same inputs as ``moment_curves_packed`` with the ALIVE column populated;
+    returns (EL, VL) each [1, N] — the masked sums over all D rows.
+    """
+    d, _ = params.shape
+    n = t_grid.shape[1]
+    assert d % BLOCK_D == 0, d
+    tril = jnp.tril(jnp.ones((nd, nd), jnp.float32)).T  # [lag, ckpt]
+    grid = (d // BLOCK_D,)
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_D, N_COLS), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, nd), lambda i: (0, 0)),
+            pl.BlockSpec((1, nd), lambda i: (0, 0)),
+            pl.BlockSpec((nd, nd), lambda i: (0, 0)),
+            pl.BlockSpec((nd + 1, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
         ],
         interpret=interpret,
     )(params, t_grid, tc, tau, tril, w_interp)

@@ -1,67 +1,64 @@
-"""jit wrapper for the moment_curves Pallas kernel.
+"""jit wrappers for the moment_curves Pallas kernels.
 
-Packs the GammaBelief into the kernel's [D, 16] parameter layout, precomputes
-the Gamma-function continuation factors (gammaln has no Pallas lowering), the
+Packs the GammaBelief into the kernels' [D, 16] parameter layout via
+``core.moments.pack_belief`` (the Gamma-function continuation factors are
+precomputed outside the kernel — gammaln has no Pallas lowering), builds the
 D-term checkpoint grids and the interp-as-matmul weights, pads D to the block
-size, and unpacks MomentCurves. Drop-in replacement for
-core.moments.moment_curves (same approximation choices: midpoint D-term on
-``d_points`` uniform checkpoints).
+size, and unpacks MomentCurves.
+
+Two entry points:
+
+* ``moment_curves_kernel`` — per-deployment curves [D, N]; drop-in
+  replacement for ``core.moments.moment_curves`` (same approximation
+  choices: midpoint D-term on ``d_points`` uniform checkpoints).
+* ``aggregate_moment_curves_kernel`` — cluster-wide masked sums [N]; the
+  fused-aggregate fast path (mask dead slots inside the kernel reduction,
+  never materialize [D, N] outside VMEM). Drop-in replacement for
+  ``core.moments.aggregate_moment_curves``.
+
+Both run in interpret mode on CPU — a first-class, tested fallback path, not
+just a debugging aid (the tier-1 suite exercises it on every run).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.scipy.special import gammaln
 
 from ...core.belief import GammaBelief
-from ...core.moments import MomentCurves
+from ...core.moments import MomentCurves, interp_matrix, pack_belief
 from ...core.processes import PopulationPriors
-from .kernel import BLOCK_D, N_COLS, moment_curves_packed
+from .kernel import (ALIVE, BLOCK_D, N_COLS, moment_curves_agg_packed,
+                     moment_curves_packed)
 
-_EPS = 1e-12
 
+def _pack(bel: GammaBelief, cores, priors: PopulationPriors,
+          alive=None) -> "tuple[jax.Array, int]":
+    """[D, 16] packed parameter rows (padded to a BLOCK_D multiple).
 
-def _pack(bel: GammaBelief, cores, priors: PopulationPriors) -> jax.Array:
-    nu = priors.nu
-    a, b = bel.mu_a, bel.mu_b
-    el = bel.lam_a / bel.lam_b
-    el2 = bel.lam_a * (bel.lam_a + 1.0) / bel.lam_b**2
-    es = bel.sig_a / bel.sig_b
-    es2 = bel.sig_a * (bel.sig_a + 1.0) / bel.sig_b**2
-    es1 = es + 1.0
-    es1sq = es2 + 2.0 * es + 1.0
-    ess2 = es2 + 2.0 * es
-    eu, eu2 = el * es1, el2 * es1sq
-
-    z1 = a + nu - 1.0
-    z1 = jnp.where(jnp.abs(z1) < _EPS, _EPS, z1)
-    rh1 = jnp.exp(gammaln(z1 + 1.0) - gammaln(a) - (nu - 1.0) * jnp.log(b)) / z1
-    z2 = a + 2.0 * nu - 2.0
-    z2 = jnp.where(jnp.abs(z2) < _EPS, _EPS, z2)
-    rk = jnp.exp(gammaln(z2 + 1.0) - gammaln(a)
-                 - (2.0 * nu - 2.0) * jnp.log(b)) / z2
-    e_mu_nu = jnp.exp(gammaln(a + nu) - gammaln(a) - nu * jnp.log(b))
+    Filler rows carry benign parameters (ones) and ALIVE=0 so the aggregate
+    variant's reduction ignores them.
+    """
+    p = pack_belief(bel, cores, priors)
+    a = p.a
     delta = jnp.full_like(a, priors.delta)
-    pad = jnp.zeros_like(a)
-    cols = [a, b, cores.astype(a.dtype), eu, eu2, el, es1, ess2, rh1, z1, rk,
-            z2, e_mu_nu, delta, pad, pad]
-    return jnp.stack(cols, axis=-1).astype(jnp.float32)  # [D, 16]
+    mask = (jnp.ones_like(a) if alive is None
+            else alive.astype(jnp.float32))
+    pad_col = jnp.zeros_like(a)
+    cols = [p.a, p.b, p.cores, p.eu, p.eu2, p.el, p.es1, p.ess2, p.rh1, p.z1,
+            p.rk, p.z2, p.e_mu_nu, delta, mask, pad_col]
+    packed = jnp.stack(cols, axis=-1).astype(jnp.float32)  # [D, 16]
+    d = packed.shape[0]
+    pad = (-d) % BLOCK_D
+    if pad:
+        filler = jnp.ones((pad, N_COLS), jnp.float32)
+        filler = filler.at[:, ALIVE].set(0.0)
+        packed = jnp.concatenate([packed, filler], axis=0)
+    return packed, d
 
 
-def _interp_weights(t_grid: jax.Array, nd: int) -> tuple:
-    t_max = t_grid[-1]
-    w = t_max / nd
-    x = jnp.arange(nd + 1, dtype=jnp.float32) * w      # [ND+1] incl. 0 anchor
-    idx = jnp.clip(jnp.searchsorted(x, t_grid, side="right") - 1, 0, nd - 1)
-    frac = (t_grid - x[idx]) / w
-    n = t_grid.shape[0]
-    w_mat = (
-        jax.nn.one_hot(idx, nd + 1, axis=0) * (1.0 - frac)[None, :]
-        + jax.nn.one_hot(idx + 1, nd + 1, axis=0) * frac[None, :]
-    )                                                   # [ND+1, N]
-    tc = (x[1:])[None, :]                               # [1, ND]
-    tau = (w * (jnp.arange(nd, dtype=jnp.float32) + 0.5))[None, :]
-    return tc, tau, w_mat.astype(jnp.float32)
+def _grids(t_grid: jax.Array, d_points: int):
+    tc, tau, w_mat = interp_matrix(t_grid.astype(jnp.float32), d_points)
+    return tc[None, :], tau[None, :], w_mat
 
 
 def moment_curves_kernel(bel: GammaBelief, cores: jax.Array,
@@ -71,14 +68,24 @@ def moment_curves_kernel(bel: GammaBelief, cores: jax.Array,
     """Kernel-backed moment curves. bel fields/cores: [D]; t_grid: [N]."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    params = _pack(bel, cores, priors)
-    d = params.shape[0]
-    pad = (-d) % BLOCK_D
-    if pad:
-        filler = jnp.ones((pad, N_COLS), jnp.float32)
-        params = jnp.concatenate([params, filler], axis=0)
-    tc, tau, w_mat = _interp_weights(t_grid.astype(jnp.float32), d_points)
+    params, d = _pack(bel, cores, priors)
+    tc, tau, w_mat = _grids(t_grid, d_points)
     el, vl = moment_curves_packed(
         params, t_grid.astype(jnp.float32)[None, :], tc, tau, w_mat,
         nd=d_points, interpret=interpret)
     return MomentCurves(EL=el[:d], VL=vl[:d])
+
+
+def aggregate_moment_curves_kernel(
+        bel: GammaBelief, cores: jax.Array, alive: jax.Array,
+        t_grid: jax.Array, priors: PopulationPriors, *, d_points: int = 32,
+        interpret: bool | None = None) -> MomentCurves:
+    """Aggregate (sum over alive slots) curves [N] via the fused kernel."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    params, _ = _pack(bel, cores, priors, alive=alive)
+    tc, tau, w_mat = _grids(t_grid, d_points)
+    el, vl = moment_curves_agg_packed(
+        params, t_grid.astype(jnp.float32)[None, :], tc, tau, w_mat,
+        nd=d_points, interpret=interpret)
+    return MomentCurves(EL=el[0], VL=vl[0])

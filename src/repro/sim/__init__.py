@@ -1,14 +1,17 @@
 """Monte-Carlo cluster simulation substrate (paper §5 evaluation machinery)."""
-from .simulator import (GLOBAL, PSEUDO, MIX_LABELED, MIX_UNLABELED,
-                        ArrivalStream, RunMetrics, SimConfig,
-                        draw_arrival_stream, make_run, run_batch)
+from .simulator import (AGG_FUSED, AGG_KERNEL, AGG_REFERENCE, GLOBAL, PSEUDO,
+                        MIX_LABELED, MIX_UNLABELED, ArrivalStream, RunMetrics,
+                        SimConfig, draw_arrival_stream, make_config, make_run,
+                        run_batch)
 from .metrics import CI, bca_ci, sla_failure_rate, weighted_mean
 from .importance import (ImportancePlan, badness_measure,
                          make_importance_plan, rejection_q)
 
 __all__ = [
-    "GLOBAL", "PSEUDO", "MIX_LABELED", "MIX_UNLABELED", "ArrivalStream",
-    "RunMetrics", "SimConfig", "draw_arrival_stream", "make_run", "run_batch",
+    "AGG_FUSED", "AGG_KERNEL", "AGG_REFERENCE", "GLOBAL", "PSEUDO",
+    "MIX_LABELED", "MIX_UNLABELED", "ArrivalStream", "RunMetrics",
+    "SimConfig", "draw_arrival_stream", "make_config", "make_run",
+    "run_batch",
     "CI", "bca_ci", "sla_failure_rate", "weighted_mean", "ImportancePlan",
     "badness_measure", "make_importance_plan", "rejection_q",
 ]

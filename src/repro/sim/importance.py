@@ -29,8 +29,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.belief import GammaBelief
-from ..core.moments import moment_curves
-from .simulator import ArrivalStream, SimConfig, draw_arrival_stream
+from ..core.moments import moment_curves_fused
+from .simulator import (ArrivalStream, SimConfig, draw_arrival_stream,
+                        shard_batch_over_devices)
 
 HOURS_PER_MONTH = 730.0
 
@@ -60,7 +61,8 @@ def badness_measure(key: jax.Array, cfg: SimConfig, grid: jax.Array) -> jax.Arra
     # only arrivals that actually occur participate
     occurs = (jnp.arange(a_max)[None, :] < stream.n_arrivals[:, None]).reshape(-1)
 
-    curves = moment_curves(_point_mass(params), c0, grid, cfg.priors, d_points=8)
+    curves = moment_curves_fused(_point_mass(params), c0, grid, cfg.priors,
+                                 d_points=8)
     i_x = jnp.max(curves.EL + jnp.sqrt(99.0 * curves.VL), axis=-1)
     i_x = jnp.where(occurs, i_x, 0.0)
 
@@ -114,6 +116,32 @@ def rejection_q(p: Sequence[float], p_r: Sequence[float]) -> np.ndarray:
     return q
 
 
+def _probe_fn(cfg: SimConfig, grid: jax.Array, devices=None):
+    """Batched badness-measure evaluator, sharded across local devices.
+
+    The probe loop is the importance sampler's own hot path (hundreds of BM
+    evaluations per plan); each probe is independent, so the key batch is
+    split over a 1-d device mesh exactly like ``run_batch`` (via the shared
+    ``shard_batch_over_devices``). Single-device (or non-divisible batch)
+    falls back to the plain vmap.
+    """
+    batched = jax.vmap(lambda k: badness_measure(k, cfg, grid))
+    fallback = jax.jit(batched)
+    devices = tuple(jax.devices() if devices is None else devices)
+    n_dev = len(devices)
+    if n_dev <= 1:
+        return fallback
+
+    sharded = shard_batch_over_devices(batched, devices, "probe")
+
+    def dispatch(keys):
+        if keys.shape[0] % n_dev == 0:
+            return sharded(keys)
+        return fallback(keys)
+
+    return dispatch
+
+
 class ImportancePlan(NamedTuple):
     keys: np.ndarray       # [R, 2] uint32 PRNG keys to simulate (full runs)
     weights: np.ndarray    # [R] stratified weights (sum to ~1)
@@ -139,7 +167,7 @@ def make_importance_plan(
     the probe never hits keep weight 0).
     """
     edges = np.asarray(edges_frac) * cfg.capacity
-    bm_fn = jax.jit(jax.vmap(lambda k: badness_measure(k, cfg, grid)))
+    bm_fn = _probe_fn(cfg, grid)
     keys = jax.random.split(key, n_probe)
     bms = []
     for i in range(0, n_probe, probe_batch):

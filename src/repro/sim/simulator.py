@@ -15,19 +15,30 @@ Arrival parameters are **pre-drawn outside the scan** so importance sampling
 (App. D) can bucket a run by its badness measure before paying for the full
 simulation, and so labeled/unlabeled (§7) and pseudo-observation (§6) priors
 can be prepared per arrival.
+
+The scan is **blocked by ``agg_refresh_steps``**: cluster-wide aggregate
+moment curves (the only thing the admission policies consume) are fully
+recomputed once per block — through a fused masked reduction, the per-slot
+reference, or the Pallas aggregate kernel (``agg_backend``) — and maintained
+incrementally inside the block by folding placed candidates' curves into
+the running sums. Per-decision cost is therefore O(grid), independent of the
+slot-array size, which is what makes the paper-scale preset feasible on CPU.
 """
 from __future__ import annotations
 
+import collections
 import functools
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.belief import (GammaBelief, apply_pseudo_observations,
                            belief_from_prior, observe_initial_size,
                            update_on_events)
-from ..core.moments import MomentCurves, moment_curves
+from ..core.moments import (MomentCurves, aggregate_moment_curves,
+                            moment_curves, moment_curves_fused)
 from ..core.policies import ZEROTH, PolicyParams, admit_sequential
 from ..core.pricing import mixture_moments
 from ..core.processes import (DeploymentParams, PopulationPriors,
@@ -35,6 +46,7 @@ from ..core.processes import (DeploymentParams, PopulationPriors,
                               sample_step_events)
 
 GLOBAL, PSEUDO, MIX_LABELED, MIX_UNLABELED = "global", "pseudo", "labeled", "unlabeled"
+AGG_FUSED, AGG_REFERENCE, AGG_KERNEL = "fused", "reference", "kernel"
 
 
 class SimConfig(NamedTuple):
@@ -51,11 +63,54 @@ class SimConfig(NamedTuple):
     d_points: int = 24               # D-term checkpoint count
     use_kernel: bool = False         # Pallas moment_curves kernel (TPU path;
                                      # interpret-mode on CPU, so off by default)
-    priors: PopulationPriors = None  # set via make_config
+    agg_backend: str = AGG_FUSED     # AGG_FUSED | AGG_REFERENCE | AGG_KERNEL:
+                                     # how the cluster-wide aggregate curves
+                                     # are computed each step (see make_run)
+    agg_refresh_steps: int = 1       # full aggregate recompute every K steps;
+                                     # between refreshes admitted candidates'
+                                     # curves are folded in incrementally
+                                     # (K=1: recompute every step)
+    priors: PopulationPriors = None  # population priors; prefer make_config,
+                                     # which defaults these to AZURE_PRIORS
 
     @property
     def n_steps(self) -> int:
         return int(round(self.horizon_hours / self.dt))
+
+
+def make_config(**overrides) -> SimConfig:
+    """Documented SimConfig constructor: ``priors`` defaults to the fitted
+    Azure priors instead of ``None`` and every field is validated eagerly, so
+    a bad config fails here rather than deep inside ``belief_from_prior``."""
+    if overrides.get("priors") is None:
+        from ..core import AZURE_PRIORS
+
+        overrides["priors"] = AZURE_PRIORS
+    return _validate_config(SimConfig(**overrides))
+
+
+def _validate_config(cfg: SimConfig) -> SimConfig:
+    if cfg.priors is None:
+        raise ValueError(
+            "SimConfig.priors is None. Construct configs via "
+            "repro.sim.make_config(...) (defaults to AZURE_PRIORS) or pass "
+            "priors=<PopulationPriors> explicitly."
+        )
+    if cfg.prior_mode not in (GLOBAL, PSEUDO, MIX_LABELED, MIX_UNLABELED):
+        raise ValueError(f"unknown prior_mode {cfg.prior_mode!r}")
+    if cfg.agg_backend not in (AGG_FUSED, AGG_REFERENCE, AGG_KERNEL):
+        raise ValueError(f"unknown agg_backend {cfg.agg_backend!r}")
+    if cfg.n_steps <= 0 or cfg.max_slots <= 0 or cfg.max_arrivals <= 0:
+        raise ValueError(
+            f"degenerate SimConfig: n_steps={cfg.n_steps} "
+            f"max_slots={cfg.max_slots} max_arrivals={cfg.max_arrivals}"
+        )
+    if cfg.agg_refresh_steps < 1 or cfg.n_steps % cfg.agg_refresh_steps:
+        raise ValueError(
+            f"agg_refresh_steps={cfg.agg_refresh_steps} must be >= 1 and "
+            f"divide n_steps={cfg.n_steps}"
+        )
+    return cfg
 
 
 class ArrivalStream(NamedTuple):
@@ -147,33 +202,101 @@ def _init_state(cfg: SimConfig) -> SimState:
 
 
 def _place_arrivals(state: SimState, accept, stream_t: ArrivalStream, cfg: SimConfig):
-    """Place accepted arrivals into free slots (static unroll over A<=cap)."""
-    alive, cores = state.alive, state.cores
-    params, bel = state.params, state.bel
-    overflow = state.slot_overflow
-    for a in range(cfg.max_arrivals):
-        free = jnp.argmin(alive)  # first False (0 if none free -> check)
-        can = accept[a] & ~alive[free]
-        overflow = overflow + jnp.where(accept[a] & alive[free], 1.0, 0.0)
-        onehot = (jnp.arange(cfg.max_slots) == free) & can
-        alive = alive | onehot
-        cores = jnp.where(onehot, stream_t.c0[a], cores)
-        params = jax.tree.map(
-            lambda s_, n: jnp.where(onehot, n[a], s_), params, stream_t.params
-        )
-        bel = jax.tree.map(
-            lambda s_, n: jnp.where(onehot, n[a], s_), bel, stream_t.bel
-        )
-    return state._replace(alive=alive, cores=cores, params=params, bel=bel,
-                          slot_overflow=overflow)
+    """Place accepted arrivals into free slots, one vectorized pass.
+
+    The i-th accepted arrival goes to the i-th free slot (in slot order) —
+    identical semantics to the previous sequential argmin unroll, but a single
+    [A, S] rank-match instead of A passes over the slot array. Accepted
+    arrivals beyond the number of free slots are counted as slot overflow.
+
+    Returns (state, placed_arrival [A]) — the mask of accepted arrivals that
+    actually landed in a slot, so the caller folds only *real* deployments
+    into the maintained aggregate (overflowed arrivals must not haunt it).
+    """
+    alive = state.alive
+    free = ~alive
+    rank = jnp.cumsum(free.astype(jnp.int32))          # free-slot rank, 1-based
+    acc = accept.astype(jnp.int32)
+    ordinal = jnp.cumsum(acc) * acc                    # i-th accepted, 1-based
+    n_free = rank[-1]
+    placed_arrival = accept & (ordinal <= n_free)      # [A]
+    overflow = state.slot_overflow + jnp.sum(
+        jnp.where(accept & ~placed_arrival, 1.0, 0.0))
+
+    hit = free[None, :] & (rank[None, :] == ordinal[:, None]) & accept[:, None]
+    placed = jnp.any(hit, axis=0)                      # [S]
+
+    def merge(old, new_a):
+        upd = hit.astype(old.dtype).T @ new_a
+        return jnp.where(placed, upd, old)
+
+    cores = merge(state.cores, stream_t.c0)
+    params = jax.tree.map(lambda o, n: merge(o, n), state.params,
+                          stream_t.params)
+    bel = jax.tree.map(lambda o, n: merge(o, n), state.bel, stream_t.bel)
+    state = state._replace(alive=alive | placed, cores=cores, params=params,
+                           bel=bel, slot_overflow=overflow)
+    return state, placed_arrival
+
+
+def _make_aggregate_fn(cfg: SimConfig, grid: jax.Array):
+    """Cluster-wide sum-over-alive-slots curve evaluator, by backend.
+
+    AGG_REFERENCE is the seed per-slot path (materialize [S, N], mask, sum) —
+    kept as the oracle the fast paths are equivalence-tested against.
+    AGG_FUSED reduces block-by-block without the [S, N] intermediate;
+    AGG_KERNEL is the Pallas aggregated-output kernel (interpret-mode on CPU).
+    """
+    if cfg.agg_backend == AGG_REFERENCE:
+
+        def aggregate(bel, cores, alive):
+            curves = moment_curves(bel, cores, grid, cfg.priors,
+                                   d_points=cfg.d_points)
+            alive_f = alive.astype(jnp.float32)
+            return (jnp.sum(curves.EL * alive_f[:, None], axis=0),
+                    jnp.sum(curves.VL * alive_f[:, None], axis=0))
+    elif cfg.agg_backend == AGG_KERNEL:
+        from ..kernels.moment_curves.ops import aggregate_moment_curves_kernel
+
+        def aggregate(bel, cores, alive):
+            out = aggregate_moment_curves_kernel(
+                bel, cores, alive, grid, cfg.priors, d_points=cfg.d_points)
+            return out.EL, out.VL
+    else:
+
+        def aggregate(bel, cores, alive):
+            out = aggregate_moment_curves(bel, cores, alive, grid, cfg.priors,
+                                          d_points=cfg.d_points)
+            return out.EL, out.VL
+
+    return aggregate
 
 
 def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int):
     """Build the jitted simulator for a fixed policy *kind* (threshold/rho stay
-    traced so tuning does not re-jit). Returns run(key, policy) -> RunMetrics."""
+    traced so tuning does not re-jit). Returns run(key, policy) -> RunMetrics.
+
+    The scan is blocked by ``cfg.agg_refresh_steps`` (= K): the cluster-wide
+    aggregate moment curves are fully recomputed from the slot array once per
+    block (via ``cfg.agg_backend``), and inside a block the aggregate is
+    maintained *incrementally* — each *placed* candidate's curves are folded
+    into the running sums, so the per-decision cost is O(grid), independent
+    of occupancy. Between refreshes the aggregate is stale by at most K
+    steps of within-block dynamics: deaths shrink the true load (stale
+    aggregate over-estimates, conservative), while scale-out grants and
+    belief updates grow it (stale aggregate under-estimates, optimistic) —
+    so K must stay small relative to the scale-out dynamics, and any
+    residual bias is absorbed by the SLA-constrained threshold tuning, which
+    calibrates against the same simulator at the same K. K = 1 recomputes
+    every step (the refresh then lags the seed's in-step recompute by
+    exactly the current step's death/belief update).
+    """
+    _validate_config(cfg)
     needs_moments = policy_kind != ZEROTH
     grid = horizon_grid
     n_grid = grid.shape[0] if needs_moments else 1
+    k_refresh = cfg.agg_refresh_steps
+    n_outer = cfg.n_steps // k_refresh
     if cfg.use_kernel:
         from ..kernels.moment_curves.ops import moment_curves_kernel
 
@@ -184,15 +307,18 @@ def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int):
             shape = cores.shape + (grid_.shape[0],)
             return MomentCurves(out.EL.reshape(shape), out.VL.reshape(shape))
     else:
-        curves_fn = moment_curves
+        curves_fn = moment_curves_fused
+    aggregate_fn = _make_aggregate_fn(cfg, grid)
 
-    def step(policy: PolicyParams, state: SimState, xs):
+    def step(policy: PolicyParams, carry, xs):
+        state, agg_el, agg_vl = carry
         key, stream_t = xs
         k_ev = key
         alive_f = state.alive.astype(jnp.float32)
 
         # 1. deaths ---------------------------------------------------------
-        ev = sample_step_events(k_ev, state.params, state.cores, cfg.priors, cfg.dt)
+        ev = sample_step_events(k_ev, state.params, state.cores, cfg.priors,
+                                cfg.dt, alive=state.alive)
         deaths = jnp.minimum(ev.core_deaths.astype(jnp.float32), state.cores) * alive_f
         exposure = state.cores * cfg.dt * alive_f
         cores = state.cores - deaths
@@ -220,13 +346,9 @@ def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int):
             priors=cfg.priors,
         )
 
-        # 4. arrivals ---------------------------------------------------------
+        # 4. arrivals, admitted against the maintained aggregate -------------
         valid = jnp.arange(cfg.max_arrivals) < stream_t.n_arrivals
         if needs_moments:
-            slot_curves = curves_fn(bel, cores, grid, cfg.priors,
-                                    d_points=cfg.d_points)
-            agg_el = jnp.sum(slot_curves.EL * alive_f[:, None], axis=0)
-            agg_vl = jnp.sum(slot_curves.VL * alive_f[:, None], axis=0)
             cand = curves_fn(stream_t.bel, stream_t.c0, grid, cfg.priors,
                              d_points=cfg.d_points)
             if cfg.prior_mode == MIX_UNLABELED:
@@ -238,15 +360,19 @@ def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int):
                 )
                 cand = mixture_moments(jnp.asarray([0.5, 0.5]), stacked)
         else:
-            agg_el = jnp.zeros((n_grid,))
-            agg_vl = jnp.zeros((n_grid,))
             cand = MomentCurves(EL=jnp.zeros((cfg.max_arrivals, n_grid)),
                                 VL=jnp.zeros((cfg.max_arrivals, n_grid)))
 
         res = admit_sequential(policy, agg_el, agg_vl, util, cand,
                                stream_t.c0, valid)
         state = state._replace(alive=alive, cores=cores, bel=bel)
-        state = _place_arrivals(state, res.accept, stream_t, cfg)
+        state, placed_arrival = _place_arrivals(state, res.accept, stream_t, cfg)
+        # fold only arrivals that actually landed in a slot into the carried
+        # aggregate — accepted-but-overflowed ones never became deployments
+        # (the seed's per-step recompute likewise only ever saw placed slots)
+        placed_f = placed_arrival.astype(jnp.float32)
+        agg_el = agg_el + jnp.einsum("an,a->n", cand.EL, placed_f)
+        agg_vl = agg_vl + jnp.einsum("an,a->n", cand.VL, placed_f)
 
         n_acc = jnp.sum(res.accept.astype(jnp.float32))
         n_rej = jnp.sum(valid.astype(jnp.float32)) - n_acc
@@ -258,7 +384,19 @@ def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int):
             arr_accepted=state.arr_accepted + n_acc,
             arr_rejected=state.arr_rejected + n_rej,
         )
-        return state, (util_end, failed)
+        return (state, agg_el, agg_vl), (util_end, failed)
+
+    def outer_block(policy: PolicyParams, state: SimState, xs_block):
+        # full refresh of the aggregate from the slot array, once per block
+        if needs_moments:
+            agg_el, agg_vl = aggregate_fn(state.bel, state.cores, state.alive)
+        else:
+            agg_el = jnp.zeros((n_grid,))
+            agg_vl = jnp.zeros((n_grid,))
+        (state, _, _), traces = jax.lax.scan(
+            functools.partial(step, policy), (state, agg_el, agg_vl), xs_block
+        )
+        return state, traces
 
     @functools.partial(jax.jit, static_argnames=())
     def run(key: jax.Array, policy: PolicyParams,
@@ -268,8 +406,10 @@ def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int):
             stream = draw_arrival_stream(k_stream, cfg)
         keys = jax.random.split(k_scan, cfg.n_steps)
         state0 = _init_state(cfg)
+        block = lambda x: x.reshape((n_outer, k_refresh) + x.shape[1:])
+        xs = jax.tree.map(block, (keys, stream))
         state, (util_trace, fail_trace) = jax.lax.scan(
-            functools.partial(step, policy), state0, (keys, stream)
+            functools.partial(outer_block, policy), state0, xs
         )
         return RunMetrics(
             utilization=state.core_hours / (cfg.horizon_hours * cfg.capacity),
@@ -279,14 +419,66 @@ def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int):
             arrivals_accepted=state.arr_accepted,
             arrivals_rejected=state.arr_rejected,
             slot_overflow=state.slot_overflow,
-            util_trace=util_trace,
-            fail_trace=fail_trace,
+            util_trace=util_trace.reshape(cfg.n_steps),
+            fail_trace=fail_trace.reshape(cfg.n_steps),
         )
 
     return run
 
 
-def run_batch(run_fn, key: jax.Array, policy: PolicyParams, n_runs: int) -> RunMetrics:
-    """vmap a batch of independent runs."""
+def shard_batch_over_devices(batched, devices, axis: str,
+                             n_replicated_args: int = 0):
+    """jit(shard_map(batched)) over a 1-d device mesh named ``axis``.
+
+    ``batched`` maps a leading-axis batch (plus ``n_replicated_args``
+    broadcast arguments) to a pytree with the same leading axis; the batch is
+    split across devices, replicated args go everywhere. Shared by
+    ``run_batch`` and the importance-sampling probe loop.
+    """
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from ..compat import shard_map
+
+    mesh = Mesh(np.asarray(devices), (axis,))
+    in_specs = (P(axis),) + (P(),) * n_replicated_args
+    return jax.jit(shard_map(batched, mesh=mesh, in_specs=in_specs,
+                             out_specs=P(axis), check_vma=False))
+
+
+# bounded LRU: a weak-keyed cache cannot work here (the cached shard_map
+# wrapper closes over run_fn, so the value would pin its own key), and jax's
+# jit cache pins run_fn process-wide anyway — so just cap how many compiled
+# sharded wrappers we keep across a sweep
+_SHARDED_RUN_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_SHARDED_RUN_CACHE_MAX = 8
+
+
+def run_batch(run_fn, key: jax.Array, policy: PolicyParams, n_runs: int,
+              *, devices=None) -> RunMetrics:
+    """A batch of independent runs: vmap over runs, shard_map over devices.
+
+    With more than one local device and ``n_runs`` divisible by the device
+    count, the key batch is sharded over a 1-d mesh and each device vmaps its
+    shard (pure data parallelism — runs never communicate). Falls back to a
+    plain vmap on a single device or when the batch does not divide evenly.
+    The compiled sharded wrapper is cached per (run_fn, devices) — the policy
+    is a traced argument — so repeated calls do not re-trace.
+    """
     keys = jax.random.split(key, n_runs)
-    return jax.vmap(lambda k: run_fn(k, policy))(keys)
+    devices = tuple(jax.devices() if devices is None else devices)
+    n_dev = len(devices)
+    if n_dev <= 1 or n_runs % n_dev != 0:
+        return jax.vmap(run_fn, in_axes=(0, None))(keys, policy)
+
+    cache_key = (run_fn, devices)
+    sharded = _SHARDED_RUN_CACHE.get(cache_key)
+    if sharded is None:
+        sharded = shard_batch_over_devices(
+            jax.vmap(run_fn, in_axes=(0, None)), devices, "runs",
+            n_replicated_args=1)
+        _SHARDED_RUN_CACHE[cache_key] = sharded
+        while len(_SHARDED_RUN_CACHE) > _SHARDED_RUN_CACHE_MAX:
+            _SHARDED_RUN_CACHE.popitem(last=False)
+    else:
+        _SHARDED_RUN_CACHE.move_to_end(cache_key)
+    return sharded(keys, policy)

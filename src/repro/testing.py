@@ -1,0 +1,112 @@
+"""Property-test support: ``hypothesis`` when installed, deterministic
+fallback otherwise.
+
+The test suite's property tests want hypothesis's shrinking and example
+database, but the pinned offline environment cannot install it. Importing
+``given`` / ``settings`` / ``strategies`` from this module uses the real
+library when available (it stays a ``dev`` extra in pyproject.toml) and
+otherwise degrades to a small deterministic sampler implementing exactly the
+subset the suite uses:
+
+  * ``strategies.integers(min_value, max_value)``
+  * ``strategies.floats(min_value, max_value)``
+  * ``@given(**kwargs_of_strategies)``
+  * ``@settings(max_examples=..., deadline=...)`` (deadline is ignored)
+
+The fallback seeds a PRNG from the test function's qualified name, so runs
+are reproducible, and always includes the all-min / all-max corner examples
+before random interior samples.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        """A bounded scalar sampler with explicit corner examples."""
+
+        def __init__(self, corners, sample):
+            self.corners = corners      # tried first, in order
+            self.sample = sample        # sample(rng) -> random interior value
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                corners=[int(min_value), int(max_value)],
+                sample=lambda rng: int(
+                    rng.integers(min_value, int(max_value) + 1)),
+            )
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy(
+                corners=[lo, hi],
+                sample=lambda rng: float(rng.uniform(lo, hi)),
+            )
+
+    strategies = _Strategies()
+
+    def settings(max_examples=None, deadline=None, **_ignored):
+        """Record ``max_examples`` on the decorated test (deadline ignored)."""
+
+        def deco(fn):
+            if max_examples is not None:
+                fn._pt_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        """Run the test body over deterministic samples of each strategy."""
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_pt_max_examples",
+                            getattr(fn, "_pt_max_examples",
+                                    _DEFAULT_MAX_EXAMPLES))
+                rng = _np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                names = sorted(strats)
+                n_corners = max(len(strats[k].corners) for k in names)
+                for i in range(max(1, n)):
+                    if i < n_corners:
+                        drawn = {
+                            k: strats[k].corners[min(
+                                i, len(strats[k].corners) - 1)]
+                            for k in names
+                        }
+                    else:
+                        drawn = {k: strats[k].sample(rng) for k in names}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:  # noqa: BLE001 - re-raise w/ repro
+                        raise AssertionError(
+                            f"property test failed on example {drawn!r} "
+                            f"(deterministic fallback, example {i + 1}/{n})"
+                        ) from e
+
+            # pytest collects the *wrapper*: hide the strategy-supplied
+            # parameters so they are not mistaken for fixtures.
+            sig = inspect.signature(fn)
+            kept = [p for name, p in sig.parameters.items()
+                    if name not in strats]
+            wrapper.__signature__ = sig.replace(parameters=kept)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

@@ -1,0 +1,13 @@
+"""Shared test configuration.
+
+Enables jax's persistent compilation cache (repo-local, gitignored): the
+suite is compile-dominated on CPU, so warm reruns — the common local dev
+loop — skip most XLA work. Cold CI runs are unaffected.
+"""
+import os
+
+import jax
+
+jax.config.update("jax_compilation_cache_dir",
+                  os.path.join(os.path.dirname(__file__), "..", ".jax_cache"))
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)

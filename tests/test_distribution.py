@@ -23,6 +23,7 @@ def _run(snippet: str):
     return out.stdout
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     """Loss on a (2,4) data×model mesh == loss on one device."""
     _run("""
@@ -59,6 +60,7 @@ print('OK', float(m_plain['loss']), float(m_sharded['loss']))
 """)
 
 
+@pytest.mark.slow
 def test_moe_local_dispatch_matches_global():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
@@ -100,6 +102,7 @@ print('OK')
 """)
 
 
+@pytest.mark.slow
 def test_elastic_reshard_roundtrip(tmp_path):
     """Checkpoint on a (2,4) mesh, restore onto (1,8) and (8,1) — elastic."""
     _run(f"""

@@ -98,8 +98,13 @@ def _point_mass_belief(lam, mu, sig, k=1e7):
                        sig_a=arr(sig * k), sig_b=arr(k))
 
 
+@pytest.mark.slow
 class TestConditionalProcessVsMC:
-    """Event-level MC of the continuous-time process at fixed parameters."""
+    """Event-level MC of the continuous-time process at fixed parameters.
+
+    Marked ``slow`` (hundreds of thousands of MC draws per check): these are
+    the oracle-grade validations, run in CI on push and locally via
+    ``pytest -m slow``."""
 
     lam, mu, sig = 0.5, 0.2, 2.0
 

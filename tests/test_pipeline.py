@@ -4,6 +4,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
@@ -16,6 +18,7 @@ def _run(snippet: str):
     assert out.returncode == 0, f"stdout:{out.stdout}\nstderr:{out.stderr}"
 
 
+@pytest.mark.slow
 def test_pipeline_forward_and_grad_match_sequential():
     _run("""
 import jax, jax.numpy as jnp, numpy as np

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, strategies as st
 
 from repro.core import (AZURE_PRIORS, FIRST, SECOND, ZEROTH, geometric_grid,
                         make_policy)
@@ -14,9 +14,12 @@ from repro.sim import (MIX_UNLABELED, PSEUDO, SimConfig, badness_measure,
                        bca_ci, make_importance_plan, make_run, rejection_q,
                        sla_failure_rate)
 
-CFG = SimConfig(capacity=500.0, arrival_rate=0.05, horizon_hours=60 * 24.0,
-                dt=24.0, max_slots=128, max_arrivals=4, priors=AZURE_PRIORS)
-GRID = geometric_grid(24.0, 3 * 60 * 24.0, 16)
+# small on purpose: these are invariant checks, not statistics; d_points=8
+# and the 12-point grid keep each make_run compile a few seconds on CPU
+CFG = SimConfig(capacity=500.0, arrival_rate=0.08, horizon_hours=30 * 24.0,
+                dt=24.0, max_slots=96, max_arrivals=4, d_points=8,
+                priors=AZURE_PRIORS)
+GRID = geometric_grid(24.0, 3 * 30 * 24.0, 12)
 
 
 @pytest.fixture(scope="module")
@@ -53,12 +56,12 @@ class TestSimulatorInvariants:
 
     def test_threshold_monotone_in_utilization(self, zeroth_run):
         utils = []
-        for t in (100.0, 300.0, 500.0):
+        for t in (100.0, 500.0):
             pol = make_policy(ZEROTH, threshold=t, capacity=CFG.capacity)
             m = jax.vmap(lambda k: zeroth_run(k, pol))(
                 jax.random.split(jax.random.PRNGKey(0), 4))
             utils.append(float(jnp.mean(m.utilization)))
-        assert utils[0] <= utils[1] <= utils[2]
+        assert utils[0] <= utils[1]
 
     def test_moment_policy_runs_with_pseudo_obs(self):
         cfg = CFG._replace(prior_mode=PSEUDO, n_pseudo_obs=5)
@@ -68,6 +71,7 @@ class TestSimulatorInvariants:
         m = run(jax.random.PRNGKey(0), pol)
         assert 0.0 <= float(m.utilization) <= 1.0
 
+    @pytest.mark.slow
     def test_mixture_mode_runs(self):
         cfg = CFG._replace(prior_mode=MIX_UNLABELED, n_pseudo_obs=5)
         run = make_run(cfg, GRID, SECOND)
