@@ -19,7 +19,7 @@ import sys
 import time
 
 from . import (ablation_marginal, fig1_priors, fig2_pricing, kernels_bench,
-               roofline, table2_policies)
+               roofline, scenarios, table2_policies)
 
 MODULES = {
     "kernels": kernels_bench,
@@ -28,6 +28,7 @@ MODULES = {
     "fig1": fig1_priors,
     "fig2": fig2_pricing,
     "ablation_marginal": ablation_marginal,
+    "scenarios": scenarios,
 }
 
 

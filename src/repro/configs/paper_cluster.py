@@ -8,6 +8,7 @@ benchmarks/common.SCALES and the scale-validity discussion in EXPERIMENTS.md
 """
 from repro.core.processes import AZURE_PRIORS
 from repro.sim.simulator import SimConfig
+from repro.traces.synth import TraceSpec
 
 #: paper §5.2, verbatim scale
 PAPER_FULL = SimConfig(
@@ -28,6 +29,25 @@ PAPER_CPU = SimConfig(
     dt=12.0,
     max_slots=768,
     max_arrivals=5,
+    priors=AZURE_PRIORS,
+)
+
+#: synthetic-trace counterparts of the presets (repro.traces): capacity is
+#: sized ~2x the expected arrival count so bursty scenarios (flash crowds)
+#: never clip against the columnar buffer.
+TRACE_FULL = TraceSpec(
+    horizon_hours=PAPER_FULL.horizon_hours,
+    arrival_rate=PAPER_FULL.arrival_rate,
+    max_deployments=65_536,
+    max_events=32,
+    priors=AZURE_PRIORS,
+)
+
+TRACE_CPU = TraceSpec(
+    horizon_hours=PAPER_CPU.horizon_hours,
+    arrival_rate=PAPER_CPU.arrival_rate,
+    max_deployments=4_096,
+    max_events=16,
     priors=AZURE_PRIORS,
 )
 

@@ -1,17 +1,20 @@
 """Monte-Carlo cluster simulation substrate (paper §5 evaluation machinery)."""
 from .simulator import (AGG_FUSED, AGG_KERNEL, AGG_REFERENCE, GLOBAL, PSEUDO,
-                        MIX_LABELED, MIX_UNLABELED, ArrivalStream, RunMetrics,
+                        MIX_LABELED, MIX_UNLABELED, ArrivalSource,
+                        ArrivalStream, PriorArrivalSource, RunMetrics,
                         SimConfig, draw_arrival_stream, make_config, make_run,
-                        run_batch)
+                        run_batch, run_keyed_batch)
 from .metrics import CI, bca_ci, sla_failure_rate, weighted_mean
-from .importance import (ImportancePlan, badness_measure,
-                         make_importance_plan, rejection_q)
+from .importance import (ImportancePlan, badness_measure, estimate_from_plan,
+                         make_importance_plan, rejection_q, simulate_plan)
 
 __all__ = [
     "AGG_FUSED", "AGG_KERNEL", "AGG_REFERENCE", "GLOBAL", "PSEUDO",
-    "MIX_LABELED", "MIX_UNLABELED", "ArrivalStream", "RunMetrics",
+    "MIX_LABELED", "MIX_UNLABELED", "ArrivalSource", "ArrivalStream",
+    "PriorArrivalSource", "RunMetrics",
     "SimConfig", "draw_arrival_stream", "make_config", "make_run",
-    "run_batch",
+    "run_batch", "run_keyed_batch",
     "CI", "bca_ci", "sla_failure_rate", "weighted_mean", "ImportancePlan",
-    "badness_measure", "make_importance_plan", "rejection_q",
+    "badness_measure", "estimate_from_plan", "make_importance_plan",
+    "rejection_q", "simulate_plan",
 ]

@@ -19,10 +19,13 @@ We implement:
     p(I_i), then fill per-bucket quotas and weight runs by p_i/n_i). This is
     the textbook-equivalent of the paper's rejection scheme in expectation
     and is deterministic in the number of expensive simulations.
+  * ``simulate_plan`` / ``estimate_from_plan`` — run every selected key
+    through the device-sharded ``run_keyed_batch`` (no serial per-run loop
+    in callers) and combine the metrics with the stratified weights.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +33,9 @@ import numpy as np
 
 from ..core.belief import GammaBelief
 from ..core.moments import moment_curves_fused
-from .simulator import (ArrivalStream, SimConfig, draw_arrival_stream,
+from .metrics import sla_failure_rate, weighted_mean
+from .simulator import (ArrivalSource, ArrivalStream, RunMetrics, SimConfig,
+                        draw_arrival_stream, run_keyed_batch,
                         shard_batch_over_devices)
 
 HOURS_PER_MONTH = 730.0
@@ -44,15 +49,21 @@ def _point_mass(params, k=1e6) -> GammaBelief:
     )
 
 
-def badness_measure(key: jax.Array, cfg: SimConfig, grid: jax.Array) -> jax.Array:
+def badness_measure(key: jax.Array, cfg: SimConfig, grid: jax.Array,
+                    source: Optional[ArrivalSource] = None) -> jax.Array:
     """BM(r) for the run whose arrival stream is drawn from ``key`` (Def. 5).
 
     Splits ``key`` exactly like ``simulator.make_run``'s run() so the BM
     describes the same arrival stream the expensive simulation will see.
+    ``source`` selects the arrival backend (default: prior sampling); with a
+    trace-replay source the stream — and therefore BM — is key-independent,
+    so stratification degenerates to a single bucket, which is correct: a
+    fixed trace has no arrival-side tail to oversample.
     """
     k_stream, k_scan = jax.random.split(key)
     k_life = jax.random.fold_in(k_scan, 99)
-    stream = draw_arrival_stream(k_stream, cfg)
+    stream = (draw_arrival_stream(k_stream, cfg) if source is None
+              else source.stream(k_stream, cfg))
     t_steps, a_max = stream.c0.shape
     n_dep = t_steps * a_max
 
@@ -116,7 +127,7 @@ def rejection_q(p: Sequence[float], p_r: Sequence[float]) -> np.ndarray:
     return q
 
 
-def _probe_fn(cfg: SimConfig, grid: jax.Array, devices=None):
+def _probe_fn(cfg: SimConfig, grid: jax.Array, devices=None, source=None):
     """Batched badness-measure evaluator, sharded across local devices.
 
     The probe loop is the importance sampler's own hot path (hundreds of BM
@@ -125,7 +136,7 @@ def _probe_fn(cfg: SimConfig, grid: jax.Array, devices=None):
     ``shard_batch_over_devices``). Single-device (or non-divisible batch)
     falls back to the plain vmap.
     """
-    batched = jax.vmap(lambda k: badness_measure(k, cfg, grid))
+    batched = jax.vmap(lambda k: badness_measure(k, cfg, grid, source))
     fallback = jax.jit(batched)
     devices = tuple(jax.devices() if devices is None else devices)
     n_dev = len(devices)
@@ -158,6 +169,7 @@ def make_importance_plan(
     edges_frac: Sequence[float] = (1.25, 1.5),
     n_probe: int = 512,
     probe_batch: int = 64,
+    source: Optional[ArrivalSource] = None,
 ) -> ImportancePlan:
     """Stratified importance plan over BM buckets.
 
@@ -167,7 +179,7 @@ def make_importance_plan(
     the probe never hits keep weight 0).
     """
     edges = np.asarray(edges_frac) * cfg.capacity
-    bm_fn = _probe_fn(cfg, grid)
+    bm_fn = _probe_fn(cfg, grid, source=source)
     keys = jax.random.split(key, n_probe)
     bms = []
     for i in range(0, n_probe, probe_batch):
@@ -193,3 +205,33 @@ def make_importance_plan(
         p_bucket=p_hat,
         bm_probe=bm,
     )
+
+
+def simulate_plan(run_fn, plan: ImportancePlan, policy, *,
+                  devices=None) -> RunMetrics:
+    """Simulate every selected run of a plan through the sharded batch path.
+
+    The plan's keys are an explicit batch (selected by BM bucket, not split
+    from one root key), so they route through ``run_keyed_batch`` — the same
+    device-sharded vmap as ordinary batches — instead of the serial per-run
+    loop callers previously hand-rolled. Returns per-run ``RunMetrics`` in
+    plan order; combine with ``plan.weights`` via ``estimate_from_plan``.
+    """
+    return run_keyed_batch(run_fn, jnp.asarray(plan.keys), policy,
+                           devices=devices)
+
+
+def estimate_from_plan(plan: ImportancePlan, metrics: RunMetrics) -> dict:
+    """Stratified estimates from a simulated plan: weighted utilization and
+    the aggregate SLA failure rate (weights are the estimated bucket masses
+    spread over each bucket's runs, so rare bad runs count at their true
+    probability)."""
+    w = plan.weights
+    return {
+        "utilization": weighted_mean(np.asarray(metrics.utilization), w),
+        "sla_fail": sla_failure_rate(np.asarray(metrics.failed_requests),
+                                     np.asarray(metrics.total_requests),
+                                     weights=w),
+        "n_runs": int(len(w)),
+        "weight_mass": float(np.sum(w)),
+    }

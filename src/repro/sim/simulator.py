@@ -14,7 +14,10 @@ step of length ``dt`` hours:
 Arrival parameters are **pre-drawn outside the scan** so importance sampling
 (App. D) can bucket a run by its badness measure before paying for the full
 simulation, and so labeled/unlabeled (§7) and pseudo-observation (§6) priors
-can be prepared per arrival.
+can be prepared per arrival. The pre-drawn ``ArrivalStream`` is produced by a
+pluggable ``ArrivalSource``: ``PriorArrivalSource`` samples the population
+priors (the paper's setting), ``traces.replay.TraceArrivalSource`` replays a
+recorded ``WorkloadTrace`` — the scan body never knows the difference.
 
 The scan is **blocked by ``agg_refresh_steps``**: cluster-wide aggregate
 moment curves (the only thing the admission policies consume) are fully
@@ -121,6 +124,30 @@ class ArrivalStream(NamedTuple):
     bel: GammaBelief                 # provider's prior belief for the arrival
     bel_alt: GammaBelief             # second mixture component (unlabeled mode)
     n_arrivals: jax.Array            # [T] arrivals per step (already capped)
+
+
+class ArrivalSource:
+    """Pluggable producer of the pre-drawn ``ArrivalStream``.
+
+    ``make_run`` consumes arrivals exclusively through this interface: the
+    scan body, policies, and importance sampling only ever see the stream,
+    so any source that returns correctly-shaped ``[n_steps, max_arrivals]``
+    fields plugs in without touching the simulator. Two backends ship:
+    ``PriorArrivalSource`` (sample the population priors — the seed
+    behavior) and ``traces.replay.TraceArrivalSource`` (replay a recorded
+    ``WorkloadTrace``). ``stream`` is called inside the jitted run, so it
+    must be traceable; closed-over trace arrays become constants.
+    """
+
+    def stream(self, key: jax.Array, cfg: SimConfig) -> "ArrivalStream":
+        raise NotImplementedError
+
+
+class PriorArrivalSource(ArrivalSource):
+    """Draw every arrival from the population priors (paper §5 default)."""
+
+    def stream(self, key: jax.Array, cfg: SimConfig) -> "ArrivalStream":
+        return draw_arrival_stream(key, cfg)
 
 
 class RunMetrics(NamedTuple):
@@ -272,9 +299,14 @@ def _make_aggregate_fn(cfg: SimConfig, grid: jax.Array):
     return aggregate
 
 
-def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int):
+def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int,
+             arrival_source: ArrivalSource | None = None):
     """Build the jitted simulator for a fixed policy *kind* (threshold/rho stay
     traced so tuning does not re-jit). Returns run(key, policy) -> RunMetrics.
+
+    ``arrival_source`` selects where arrivals come from (default: sample the
+    population priors); an explicit ``stream`` argument to run() still takes
+    precedence over the source.
 
     The scan is blocked by ``cfg.agg_refresh_steps`` (= K): the cluster-wide
     aggregate moment curves are fully recomputed from the slot array once per
@@ -292,6 +324,7 @@ def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int):
     exactly the current step's death/belief update).
     """
     _validate_config(cfg)
+    source = PriorArrivalSource() if arrival_source is None else arrival_source
     needs_moments = policy_kind != ZEROTH
     grid = horizon_grid
     n_grid = grid.shape[0] if needs_moments else 1
@@ -403,7 +436,7 @@ def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int):
             stream: Optional[ArrivalStream] = None) -> RunMetrics:
         k_stream, k_scan = jax.random.split(key)
         if stream is None:
-            stream = draw_arrival_stream(k_stream, cfg)
+            stream = source.stream(k_stream, cfg)
         keys = jax.random.split(k_scan, cfg.n_steps)
         state0 = _init_state(cfg)
         block = lambda x: x.reshape((n_outer, k_refresh) + x.shape[1:])
@@ -453,18 +486,24 @@ _SHARDED_RUN_CACHE: "collections.OrderedDict" = collections.OrderedDict()
 _SHARDED_RUN_CACHE_MAX = 8
 
 
-def run_batch(run_fn, key: jax.Array, policy: PolicyParams, n_runs: int,
-              *, devices=None) -> RunMetrics:
-    """A batch of independent runs: vmap over runs, shard_map over devices.
+def run_keyed_batch(run_fn, keys: jax.Array, policy: PolicyParams,
+                    *, devices=None) -> RunMetrics:
+    """Simulate an explicit ``[R, ...]`` batch of PRNG keys: vmap over runs,
+    shard_map over devices.
 
-    With more than one local device and ``n_runs`` divisible by the device
+    With more than one local device and the batch divisible by the device
     count, the key batch is sharded over a 1-d mesh and each device vmaps its
     shard (pure data parallelism — runs never communicate). Falls back to a
     plain vmap on a single device or when the batch does not divide evenly.
     The compiled sharded wrapper is cached per (run_fn, devices) — the policy
     is a traced argument — so repeated calls do not re-trace.
+
+    Taking keys (not a count) is what lets the importance-sampling estimator
+    route its pre-selected ``ImportancePlan.keys`` through the same sharded
+    path as ordinary batches (see ``importance.simulate_plan``).
     """
-    keys = jax.random.split(key, n_runs)
+    keys = jnp.asarray(keys)
+    n_runs = keys.shape[0]
     devices = tuple(jax.devices() if devices is None else devices)
     n_dev = len(devices)
     if n_dev <= 1 or n_runs % n_dev != 0:
@@ -482,3 +521,11 @@ def run_batch(run_fn, key: jax.Array, policy: PolicyParams, n_runs: int,
     else:
         _SHARDED_RUN_CACHE.move_to_end(cache_key)
     return sharded(keys, policy)
+
+
+def run_batch(run_fn, key: jax.Array, policy: PolicyParams, n_runs: int,
+              *, devices=None) -> RunMetrics:
+    """A batch of ``n_runs`` independent runs split from one key; see
+    ``run_keyed_batch`` for the sharding behavior."""
+    return run_keyed_batch(run_fn, jax.random.split(key, n_runs), policy,
+                           devices=devices)

@@ -1,0 +1,54 @@
+"""Trace-driven workload subsystem: schema, generators, fitting, replay.
+
+The paper's evaluation is grounded in a Microsoft Azure trace; this package
+makes the repo trace-driven end to end:
+
+  * ``schema``  — ``WorkloadTrace``: a columnar, fixed-capacity, jit-friendly
+    record of one workload (arrivals, latents, observables, scale-out event
+    streams) with lossless NPZ and human-readable CSV persistence.
+  * ``synth``   — vectorized JAX generators that synthesize Azure-like
+    traces from ``PopulationPriors``, plus composable scenario modifiers
+    (diurnal rate modulation, flash-crowd bursts, heavy-tail lifetime
+    inflation, correlated batch arrivals) behind a scenario registry.
+  * ``fit``     — moment-matching + Gamma-MLE recovery of
+    ``PopulationPriors`` from any trace (latent or observables-only),
+    closing the generate → fit → Table-1 loop.
+  * ``replay``  — ``TraceArrivalSource``: any trace as a simulator arrival
+    backend.
+
+ArrivalSource contract (see ``sim.simulator.ArrivalSource``): a source's
+``stream(key, cfg)`` returns the same pre-drawn ``[n_steps, max_arrivals]``
+``ArrivalStream`` that ``draw_arrival_stream`` produces — true latent
+parameters, initial request sizes, provider beliefs, and the per-step
+arrival counts. Because the scan body, admission policies, and importance
+sampling consume only that stream, prior sampling and trace replay are
+interchangeable backends: ``make_run(cfg, grid, kind, arrival_source=...)``
+is the single switch, and an explicit ``stream=`` argument to the built
+run() still overrides both.
+
+Scenario registry: ``synth.register_scenario(name)`` registers a
+``fn(key, spec) -> WorkloadTrace`` recipe (à la ``models/registry.py``);
+``scenario_names()`` / ``get_scenario(name)`` / ``synthesize_scenario``
+enumerate and invoke them. Shipped scenarios: ``baseline``, ``diurnal``,
+``flash_crowd``, ``heavy_tail``, ``batched`` — all runnable through
+``benchmarks/scenarios.py``.
+"""
+from .schema import (ScaleoutEvents, WorkloadTrace, events_csv_path,
+                     has_latents, load_csv, load_npz, n_deployments, save_csv,
+                     save_npz, validate_trace)
+from .synth import (Scenario, TraceSpec, get_scenario, register_scenario,
+                    scenario_names, synthesize_scenario, synthesize_trace)
+from .fit import (fit_gamma_mle, fit_gamma_moments, fit_priors,
+                  prior_relative_errors)
+from .replay import TraceArrivalSource, params_from_trace, trace_to_stream
+
+__all__ = [
+    "ScaleoutEvents", "WorkloadTrace", "events_csv_path", "has_latents",
+    "load_csv", "load_npz", "n_deployments", "save_csv", "save_npz",
+    "validate_trace",
+    "Scenario", "TraceSpec", "get_scenario", "register_scenario",
+    "scenario_names", "synthesize_scenario", "synthesize_trace",
+    "fit_gamma_mle", "fit_gamma_moments", "fit_priors",
+    "prior_relative_errors",
+    "TraceArrivalSource", "params_from_trace", "trace_to_stream",
+]

@@ -1,0 +1,129 @@
+"""Trace replay: a ``WorkloadTrace`` as the simulator's ``ArrivalSource``.
+
+``trace_to_stream`` buckets the trace's (sorted) arrivals into simulator
+steps, caps each step at ``cfg.max_arrivals`` (overflow arrivals are
+dropped and counted — widen ``max_arrivals`` or shrink ``dt`` if the count
+is material), and scatters deployments into the ``[n_steps, max_arrivals]``
+pre-drawn layout of ``ArrivalStream`` in one vectorized pass. The scan body
+then treats replayed and prior-sampled runs identically: run-to-run
+randomness (deaths, scale-out timing) still comes from the run key, while
+*who arrives when, asking for how much, with what latent parameters* comes
+from the trace.
+
+Latent parameters drive the within-run event sampling. When the trace
+lacks them (a real observed trace), per-deployment conjugate posterior
+means under ``cfg.priors`` are imputed from the trace's observables —
+exactly the Gamma updates of ``core.belief``, applied trace-side.
+
+Provider beliefs are the population prior plus the C0 size observation,
+i.e. the paper's GLOBAL information model; the richer §6/§7 modes encode
+provider-side knowledge that a bare trace does not carry, so replay
+rejects those configs loudly rather than silently degrading.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.belief import belief_from_prior, observe_initial_size
+from ..core.processes import DeploymentParams, PopulationPriors
+from ..sim.simulator import (GLOBAL, ArrivalSource, ArrivalStream, SimConfig,
+                             _validate_config)
+from .schema import WorkloadTrace, validate_trace
+
+
+def params_from_trace(trace: WorkloadTrace,
+                      priors: PopulationPriors) -> DeploymentParams:
+    """Per-deployment latents; conjugate posterior means where missing.
+
+    mu | data  ~ Gamma(a + deaths, b + core-hours);  sig from the size
+    observations (C0 plus scale-out sizes); lam from the scale-out counts
+    with the E[mu**nu]-style exposure approximated at the posterior-mean mu
+    (same E-step shortcut as ``core.belief``).
+    """
+    deaths = trace.n_core_deaths
+    mu_post = (priors.mu_shape + deaths) / (priors.mu_rate + trace.core_hours)
+    sig_post = (priors.sig_shape + (trace.c0 - 1.0)
+                + (trace.scaleout_cores - trace.n_scaleouts)) / (
+                    priors.sig_rate + 1.0 + trace.n_scaleouts)
+    lam_post = (priors.lam_shape + trace.n_scaleouts) / (
+        priors.lam_rate + mu_post ** priors.nu * trace.obs_window)
+    pick = lambda latent, post: jnp.where(
+        jnp.isfinite(latent) & (latent > 0.0), latent, post)
+    return DeploymentParams(
+        lam=pick(trace.lam, lam_post),
+        mu=pick(trace.mu, mu_post),
+        sig=jnp.where(jnp.isfinite(trace.sig), trace.sig, sig_post),
+    )
+
+
+def trace_to_stream(trace: WorkloadTrace,
+                    cfg: SimConfig) -> tuple[ArrivalStream, jax.Array]:
+    """Scatter a trace into the simulator's pre-drawn arrival layout.
+
+    Returns ``(stream, n_dropped)`` where ``n_dropped`` counts arrivals lost
+    to the per-step ``max_arrivals`` cap (arrivals beyond ``cfg``'s horizon
+    are simply outside the replayed window and not counted as drops).
+    """
+    _validate_config(cfg)
+    # the cumulative-rank scatter below assumes sorted valid arrivals; a
+    # hand-built trace that skipped sorting would otherwise be corrupted
+    # silently. Concrete arrays only — under vmap/tracing the caller is
+    # responsible (TraceArrivalSource validates at construction).
+    if not isinstance(trace.arrival_hours, jax.core.Tracer):
+        validate_trace(trace)
+    if cfg.prior_mode != GLOBAL:
+        raise ValueError(
+            f"trace replay supports prior_mode={GLOBAL!r} only (a trace does "
+            f"not carry the provider-side knowledge of {cfg.prior_mode!r})")
+    t_steps, a_max = cfg.n_steps, cfg.max_arrivals
+    step = jnp.floor(trace.arrival_hours / cfg.dt).astype(jnp.int32)
+    ok = trace.valid & (trace.arrival_hours < cfg.horizon_hours) & (step >= 0)
+    step_c = jnp.clip(step, 0, t_steps - 1)
+
+    occ = ok.astype(jnp.int32)
+    counts = jax.ops.segment_sum(occ, step_c, num_segments=t_steps)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank = (jnp.cumsum(occ) - 1) - starts[step_c]   # order within the step
+    placed = ok & (rank < a_max)
+    n_dropped = jnp.sum(ok & ~placed)
+    flat = jnp.where(placed, step_c * a_max + rank, t_steps * a_max)
+
+    def scatter(x, fill):
+        out = jnp.full((t_steps * a_max,), fill, x.dtype)
+        return out.at[flat].set(x, mode="drop").reshape(t_steps, a_max)
+
+    params = params_from_trace(trace, cfg.priors)
+    params = DeploymentParams(lam=scatter(params.lam, 0.0),
+                              mu=scatter(params.mu, 1.0),
+                              sig=scatter(params.sig, 0.0))
+    c0 = scatter(trace.c0.astype(jnp.float32), 1.0)
+    n_arrivals = jnp.minimum(counts, a_max)
+
+    bel = belief_from_prior(cfg.priors, (t_steps, a_max))
+    bel = observe_initial_size(bel, c0)
+    return ArrivalStream(params=params, c0=c0, bel=bel, bel_alt=bel,
+                         n_arrivals=n_arrivals), n_dropped
+
+
+class TraceArrivalSource(ArrivalSource):
+    """Replay a fixed ``WorkloadTrace`` through ``make_run``.
+
+    The run key no longer influences arrivals (they are the trace), only the
+    within-run event randomness; two runs with different keys against the
+    same source share an arrival stream, which is exactly the trace-driven
+    evaluation mode of the benchmarks.
+    """
+
+    def __init__(self, trace: WorkloadTrace):
+        self.trace = validate_trace(trace)
+
+    def stream(self, key: jax.Array, cfg: SimConfig) -> ArrivalStream:
+        del key  # arrivals are the trace; the run key drives the scan only
+        stream, _ = trace_to_stream(self.trace, cfg)
+        return stream
+
+    def n_dropped(self, cfg: SimConfig) -> int:
+        """Arrivals lost to the max_arrivals cap under ``cfg`` (host value)."""
+        return int(trace_to_stream(self.trace, cfg)[1])

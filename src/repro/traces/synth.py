@@ -1,0 +1,293 @@
+"""Vectorized JAX trace generators + the scenario registry.
+
+``synthesize_trace`` draws an Azure-like workload trace from
+``PopulationPriors`` in one fully-vectorized pass (no python loop over
+deployments), following the paper's §2.1 generative model:
+
+  * arrivals: an inhomogeneous Poisson process via time-warping — the count
+    comes from the integrated rate, and sorted uniforms on [0, Λ(horizon)]
+    map through the inverse cumulative rate (a dense ``jnp.interp`` table),
+    which is exact up to interpolation and, unlike thinning at the peak
+    rate, wastes no trace capacity on bursty profiles;
+  * latents (lam, mu, sig) ~ the Gamma priors; C0 ~ 1 + Poisson(sig);
+  * observation window = min(Exp(delta * mu), horizon - arrival) (exact,
+    memoryless), with the spontaneous-death indicator recorded;
+  * scale-outs ~ Poisson(lam * mu**nu * window); the first ``max_events``
+    events land in the trace's event buffer (times iid uniform over the
+    window — exact for a Poisson process conditioned on its count), sizes
+    1 + Poisson(sig); the scalar totals include the tail beyond the buffer;
+  * core-death observables: initial cores use exact binomial thinning over
+    the full window; scale-out cores are thinned with the *marginal* death
+    probability under a per-core independent U(0, window) remaining window
+    — an approximation (cores of one event really share that event's
+    window, which would correlate their deaths and widen the count
+    variance), paired with the Rao-Blackwellized expected exposure
+    E[min(lifetime, window)] for ``core_hours``, so the censored
+    exponential MLE mu_hat = deaths / core_hours stays consistent at the
+    mean level while the generator never materializes a per-core array.
+
+Scenario modifiers compose on top: ``rate_profile`` (arrival-rate
+modulation), ``heavy_frac``/``heavy_mu_scale`` (heavy-tail lifetime
+inflation via a mu-mixture), and ``batch_size``/``batch_share_params``
+(correlated batch arrivals that share an arrival instant and, optionally,
+latent parameters). Named combinations are registered in ``_SCENARIOS``
+(à la ``models/registry.py``): ``register_scenario`` / ``get_scenario`` /
+``scenario_names`` / ``synthesize_scenario``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.processes import (AZURE_PRIORS, DeploymentParams,
+                              PopulationPriors, fast_binomial, fast_poisson,
+                              sample_params, scaleout_rate)
+from .schema import ScaleoutEvents, WorkloadTrace
+
+
+class TraceSpec(NamedTuple):
+    """Static shape/rate parameters of a synthetic trace."""
+
+    horizon_hours: float = 365 * 24.0
+    arrival_rate: float = 0.25       # deployments/hour (base, pre-modulation)
+    max_deployments: int = 4096      # trace capacity D (Poisson tail clipped)
+    max_events: int = 16             # event-buffer width E per deployment
+    priors: PopulationPriors = AZURE_PRIORS
+
+
+def _expected_exposure_frac(mu: jax.Array, w: jax.Array,
+                            uniform_window: bool) -> tuple[jax.Array, jax.Array]:
+    """(P(death), E[min(lifetime, W)]) for Exp(mu) lifetimes.
+
+    ``uniform_window=False``: fixed window W = w. ``True``: W ~ U(0, w) —
+    the remaining window of a core added at a uniform event time. Both are
+    exact; the small-mu*w branch avoids 0/0 in float32.
+    """
+    mw = mu * w
+    ems = -jnp.expm1(-mw)                       # 1 - exp(-mu w)
+    if not uniform_window:
+        p_die = ems
+        exposure = jnp.where(mw > 1e-6, ems / jnp.maximum(mu, 1e-30), w)
+        return p_die, exposure
+    # W ~ U(0, w): P(T < W) = 1 - (1 - e^{-mu w})/(mu w); E[min(T,W)] = P/mu
+    p_die = jnp.where(mw > 1e-6, 1.0 - ems / jnp.maximum(mw, 1e-30), mw / 2.0)
+    exposure = jnp.where(mw > 1e-6, p_die / jnp.maximum(mu, 1e-30), w / 2.0)
+    return p_die, exposure
+
+
+_WARP_POINTS = 4096  # inverse-cumulative-rate interpolation table density
+
+
+def synthesize_trace(
+    key: jax.Array,
+    spec: TraceSpec,
+    *,
+    rate_profile: Optional[Callable[[jax.Array], jax.Array]] = None,
+    heavy_frac: float = 0.0,
+    heavy_mu_scale: float = 1.0,
+    batch_size: int = 1,
+    batch_share_params: bool = False,
+) -> WorkloadTrace:
+    """One synthetic ``WorkloadTrace`` from the population priors.
+
+    ``rate_profile(t_hours)`` returns the relative (nonnegative) arrival-rate
+    multiplier at time t; arrivals form the inhomogeneous Poisson process
+    with intensity ``arrival_rate * rate_profile(t)`` via exact time-warping.
+    ``heavy_frac`` of deployments get ``mu *= heavy_mu_scale`` (lifetime
+    inflation for ``heavy_mu_scale < 1``). ``batch_size > 1`` snaps blocks of
+    consecutive arrivals to their leader's arrival instant (correlated
+    batches), sharing the leader's latent parameters when
+    ``batch_share_params``.
+    """
+    priors = spec.priors
+    d, e = spec.max_deployments, spec.max_events
+    horizon = spec.horizon_hours
+    (k_n, k_t, k_par, k_heavy, k_c0, k_spont, k_nso, k_toff, k_szb,
+     k_szt, k_d0, k_ds) = jax.random.split(key, 12)
+
+    # -- arrival stream (inhomogeneous Poisson via time-warping) ------------
+    if rate_profile is None:
+        total_mass = horizon                       # multiplier-hours
+        warp = None
+    else:
+        t_grid = jnp.linspace(0.0, horizon, _WARP_POINTS + 1)
+        r_grid = jnp.maximum(rate_profile(t_grid), 0.0)
+        dt_g = horizon / _WARP_POINTS
+        lam_grid = jnp.concatenate([
+            jnp.zeros((1,)),
+            jnp.cumsum(0.5 * (r_grid[1:] + r_grid[:-1]) * dt_g)])
+        total_mass = lam_grid[-1]
+        warp = lambda m: jnp.interp(m, lam_grid, t_grid)
+    n = jnp.minimum(
+        jax.random.poisson(k_n, spec.arrival_rate * total_mass), d
+    ).astype(jnp.int32)
+    valid = jnp.arange(d) < n
+    # event "masses" of a Poisson process given its count are n iid uniforms
+    # on [0, Λ(horizon)]: mask the unused tail *before* sorting (2*mass sorts
+    # after every real arrival) so the valid prefix is exactly n sorted
+    # uniforms — sorting all d rows and keeping the smallest n would instead
+    # pile every arrival into the first n/d of the horizon.
+    u = jnp.where(valid,
+                  jax.random.uniform(k_t, (d,)) * total_mass,
+                  2.0 * total_mass)
+    masses = jnp.sort(u)
+    t_arr = masses if warp is None else jnp.where(
+        valid, warp(masses), 2.0 * horizon)
+
+    # -- latent parameters + modifiers --------------------------------------
+    params = sample_params(k_par, priors, (d,))
+    if heavy_frac > 0.0:
+        is_heavy = jax.random.bernoulli(k_heavy, heavy_frac, (d,))
+        params = params._replace(
+            mu=jnp.where(is_heavy, params.mu * heavy_mu_scale, params.mu))
+    if batch_size > 1:
+        leader = (jnp.arange(d) // batch_size) * batch_size
+        t_arr = t_arr[leader]
+        if batch_share_params:
+            params = jax.tree.map(lambda a: a[leader], params)
+    lam, mu, sig = params.lam, params.mu, params.sig
+
+    c0 = (1.0 + fast_poisson(k_c0, sig)).astype(jnp.float32)
+
+    # -- observation window (censored spontaneous-shutdown clock) -----------
+    t_spont = jax.random.exponential(k_spont, (d,)) / (priors.delta * mu)
+    t_left = jnp.maximum(horizon - t_arr, 0.0)
+    obs_window = jnp.minimum(t_spont, t_left)
+    spont_death = (t_spont < t_left) & valid
+
+    # -- scale-out event stream ---------------------------------------------
+    so_rate = scaleout_rate(DeploymentParams(lam, mu, sig), priors)
+    n_so = fast_poisson(k_nso, so_rate * obs_window * valid)
+    n_buf = jnp.minimum(n_so, float(e))
+    ev_valid = jnp.arange(e)[None, :] < n_buf[:, None]
+    # mask the unused buffer tail before sorting (same trick as the arrival
+    # times): the valid prefix is then n_buf sorted iid uniforms — sorting
+    # all e draws and keeping the first n_buf would yield the smallest-of-e
+    # order statistics, biasing event times ~e/n_buf-fold early.
+    u_ev = jnp.where(ev_valid, jax.random.uniform(k_toff, (d, e)), 2.0)
+    ev_offsets = jnp.sort(u_ev, axis=1) * obs_window[:, None]
+    ev_sizes = (1.0 + fast_poisson(k_szb, jnp.broadcast_to(sig[:, None],
+                                                           (d, e)))) * ev_valid
+    buf_cores = jnp.sum(ev_sizes, axis=1)
+    tail = n_so - n_buf                       # events beyond the buffer
+    tail_cores = tail + fast_poisson(k_szt, tail * sig)
+    scaleout_cores = buf_cores + tail_cores
+
+    # -- core-death observables (counts exact, exposure Rao-Blackwellized) --
+    valid_f = valid.astype(jnp.float32)
+    p0, x0 = _expected_exposure_frac(mu, obs_window, uniform_window=False)
+    d0 = fast_binomial(k_d0, c0 * valid_f, p0)
+    ps, xs = _expected_exposure_frac(mu, obs_window, uniform_window=True)
+    ds = fast_binomial(k_ds, scaleout_cores * valid_f, ps)
+    n_core_deaths = d0 + ds
+    core_hours = (c0 * x0 + scaleout_cores * xs) * valid_f
+
+    z = lambda a: jnp.where(valid, a, 0.0).astype(jnp.float32)
+    return WorkloadTrace(
+        arrival_hours=jnp.where(valid, t_arr, horizon).astype(jnp.float32),
+        c0=z(c0),
+        valid=valid,
+        lam=z(lam), mu=jnp.where(valid, mu, 1.0).astype(jnp.float32),
+        sig=z(sig),
+        obs_window=z(obs_window),
+        spont_death=spont_death,
+        n_core_deaths=z(n_core_deaths),
+        core_hours=z(core_hours),
+        n_scaleouts=z(n_so),
+        scaleout_cores=z(scaleout_cores),
+        events=ScaleoutEvents(
+            t_offset=(ev_offsets * ev_valid).astype(jnp.float32),
+            cores=ev_sizes.astype(jnp.float32),
+            valid=ev_valid & valid[:, None]),
+        horizon_hours=jnp.asarray(horizon, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Scenario registry (à la models/registry.py): name -> synthesis recipe
+# ---------------------------------------------------------------------------
+
+class Scenario(NamedTuple):
+    name: str
+    describe: str
+    synth: Callable[[jax.Array, TraceSpec], WorkloadTrace]
+
+
+_SCENARIOS: dict[str, Scenario] = {}
+
+
+def register_scenario(name: str, describe: str = ""):
+    """Decorator: register ``fn(key, spec) -> WorkloadTrace`` under ``name``."""
+    def deco(fn):
+        if name in _SCENARIOS:
+            raise ValueError(f"scenario {name!r} already registered")
+        _SCENARIOS[name] = Scenario(name, describe or (fn.__doc__ or "").strip(),
+                                    fn)
+        return fn
+    return deco
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in _SCENARIOS:
+        raise KeyError(
+            f"unknown scenario {name!r}; known: {scenario_names()}")
+    return _SCENARIOS[name]
+
+
+def scenario_names() -> tuple[str, ...]:
+    return tuple(_SCENARIOS)
+
+
+def synthesize_scenario(key: jax.Array, name: str,
+                        spec: TraceSpec) -> WorkloadTrace:
+    return get_scenario(name).synth(key, spec)
+
+
+@register_scenario("baseline")
+def _baseline(key, spec):
+    """Stationary Azure-like workload straight from the priors."""
+    return synthesize_trace(key, spec)
+
+
+_DIURNAL_DEPTH = 0.75
+
+
+@register_scenario("diurnal")
+def _diurnal(key, spec):
+    """Sinusoidal day/night arrival-rate modulation (same average rate)."""
+    depth = _DIURNAL_DEPTH
+    profile = lambda t: 1.0 + depth * jnp.sin(2.0 * math.pi * t / 24.0)
+    return synthesize_trace(key, spec, rate_profile=profile)
+
+
+_FLASH_MULT = 8.0
+_FLASH_WINDOWS = ((0.30, 24.0), (0.70, 24.0))  # (start frac, duration hours)
+
+
+@register_scenario("flash_crowd")
+def _flash_crowd(key, spec):
+    """Two 24h flash-crowd bursts at 8x the base arrival rate."""
+    def profile(t):
+        m = jnp.ones_like(t)
+        for frac, dur in _FLASH_WINDOWS:
+            start = frac * spec.horizon_hours
+            m = jnp.where((t >= start) & (t < start + dur), _FLASH_MULT, m)
+        return m
+    return synthesize_trace(key, spec, rate_profile=profile)
+
+
+@register_scenario("heavy_tail")
+def _heavy_tail(key, spec):
+    """10% of deployments live 10x longer (mu scaled down) — lifetime
+    inflation à la the heavy-tail regimes of Psychas & Ghaderi."""
+    return synthesize_trace(key, spec, heavy_frac=0.1, heavy_mu_scale=0.1)
+
+
+@register_scenario("batched")
+def _batched(key, spec):
+    """Correlated batch arrivals: groups of 4 deployments submitted at the
+    same instant with shared latent parameters."""
+    return synthesize_trace(key, spec, batch_size=4, batch_share_params=True)

@@ -121,6 +121,39 @@ class TestFastSamplers:
         assert d.max() <= n
         assert d.min() >= 0.0
 
+    def test_compact_ptrs_matches_dense_distribution(self):
+        """The rank-compacted heavy-lane path (size >= _PTRS_COMPACT_MIN)
+        draws from the same distribution as the dense loop."""
+        from repro.core.processes import (_poisson_ptrs,
+                                          _poisson_ptrs_compact)
+        lam = jnp.zeros(2048).at[::100].set(75.0) + 0.5
+        act = lam > 10.0
+        keys = jax.random.split(jax.random.PRNGKey(11), 150)
+        comp = np.asarray(jax.jit(jax.vmap(
+            lambda k: _poisson_ptrs_compact(k, lam, act)))(keys))
+        dense = np.asarray(jax.jit(jax.vmap(
+            lambda k: _poisson_ptrs(k, lam, act)))(keys))
+        heavy = np.asarray(act)
+        for d in (comp, dense):
+            x = d[:, heavy].ravel()
+            se = np.sqrt(75.0 / x.size)
+            assert x.mean() == pytest.approx(75.0, abs=6 * se)
+            assert (d[:, ~heavy] == 0.0).all()  # inactive lanes untouched
+
+    def test_compact_ptrs_overflow_lanes_exact(self):
+        """More heavy lanes than the compact buffer: the overflow full-width
+        pass must keep the distribution exact (forced: 1500 heavy lanes vs a
+        2048/8=256 buffer)."""
+        lam = jnp.concatenate([jnp.full((1500,), 45.0),
+                               jnp.full((548,), 0.2)])
+        keys = jax.random.split(jax.random.PRNGKey(12), 60)
+        d = np.asarray(jax.jit(jax.vmap(
+            lambda k: fast_poisson(k, lam)))(keys))
+        x = d[:, :1500].ravel()
+        se = np.sqrt(45.0 / x.size)
+        assert x.mean() == pytest.approx(45.0, abs=6 * se)
+        assert x.var() == pytest.approx(45.0, rel=0.1)
+
     def test_heterogeneous_rates_exact_group_means(self):
         """A heavy-tailed rate vector (the simulator's regime): both hybrid
         branches produce the analytic mean within MC error, per rate group."""

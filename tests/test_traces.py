@@ -1,0 +1,295 @@
+"""Trace subsystem: schema IO, scenario generators, prior-fit round-trip,
+ArrivalSource replay equivalence, and the routed importance plan."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AZURE_PRIORS, SECOND, ZEROTH, geometric_grid, make_policy
+from repro.sim import (PSEUDO, estimate_from_plan, make_config,
+                       make_importance_plan, make_run, run_keyed_batch,
+                       simulate_plan)
+from repro.traces import (TraceArrivalSource, TraceSpec, fit_gamma_mle,
+                          fit_priors, get_scenario, has_latents, load_csv,
+                          load_npz, n_deployments, prior_relative_errors,
+                          register_scenario, save_csv, save_npz,
+                          scenario_names, synthesize_scenario,
+                          trace_to_stream, validate_trace)
+
+SMALL_SPEC = TraceSpec(horizon_hours=60 * 24.0, arrival_rate=0.08,
+                       max_deployments=512, max_events=8)
+CFG = make_config(capacity=500.0, arrival_rate=0.08, horizon_hours=60 * 24.0,
+                  dt=24.0, max_slots=128, max_arrivals=6, d_points=8)
+GRID = geometric_grid(24.0, 3 * 60 * 24.0, 12)
+
+
+@pytest.fixture(scope="module")
+def baseline_trace():
+    return synthesize_scenario(jax.random.PRNGKey(7), "baseline", SMALL_SPEC)
+
+
+@pytest.fixture(scope="module")
+def second_run():
+    return make_run(CFG, GRID, SECOND)
+
+
+class TestSchema:
+    def test_npz_roundtrip_lossless(self, baseline_trace, tmp_path):
+        p = str(tmp_path / "trace.npz")
+        save_npz(baseline_trace, p)
+        back = load_npz(p)
+        for a, b in zip(jax.tree.leaves(baseline_trace), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_csv_roundtrip_compacts_valid_rows(self, baseline_trace, tmp_path):
+        p = str(tmp_path / "trace.csv")
+        save_csv(baseline_trace, p)
+        back = load_csv(p)
+        v = np.asarray(baseline_trace.valid)
+        assert n_deployments(back) == int(v.sum())
+        np.testing.assert_allclose(np.asarray(back.arrival_hours),
+                                   np.asarray(baseline_trace.arrival_hours)[v],
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(back.c0),
+                                   np.asarray(baseline_trace.c0)[v], rtol=1e-6)
+        # the event stream survives: totals of buffered events match
+        want = np.asarray(baseline_trace.events.valid)[v].sum()
+        assert np.asarray(back.events.valid).sum() == want
+
+    def test_validate_rejects_unsorted(self, baseline_trace):
+        t = np.asarray(baseline_trace.arrival_hours).copy()
+        t[:2] = t[1::-1] + np.asarray([0.0, -1.0])  # force a descent
+        bad = baseline_trace._replace(arrival_hours=jnp.asarray(t))
+        with pytest.raises(ValueError, match="sorted"):
+            validate_trace(bad)
+
+
+class TestScenarios:
+    def test_required_scenarios_registered(self):
+        names = scenario_names()
+        for required in ("baseline", "diurnal", "flash_crowd", "heavy_tail"):
+            assert required in names
+        assert len(names) >= 4
+
+    def test_unknown_scenario_raises(self):
+        with pytest.raises(KeyError, match="unknown scenario"):
+            get_scenario("bogus")
+
+    def test_duplicate_registration_raises(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_scenario("baseline")(lambda k, s: None)
+
+    @pytest.mark.parametrize("name", ["baseline", "diurnal", "flash_crowd",
+                                      "heavy_tail", "batched"])
+    def test_scenarios_produce_valid_traces(self, name):
+        tr = validate_trace(
+            synthesize_scenario(jax.random.PRNGKey(1), name, SMALL_SPEC))
+        assert n_deployments(tr) > 0
+        assert has_latents(tr)
+        v = np.asarray(tr.valid)
+        assert np.all(np.asarray(tr.c0)[v] >= 1.0)
+        assert np.all(np.asarray(tr.obs_window)[v] >= 0.0)
+
+    def test_diurnal_modulates_and_flash_bursts(self):
+        spec = TraceSpec(horizon_hours=365 * 24.0, arrival_rate=0.3,
+                         max_deployments=8192)
+        base = synthesize_scenario(jax.random.PRNGKey(3), "baseline", spec)
+        diu = synthesize_scenario(jax.random.PRNGKey(3), "diurnal", spec)
+        fla = synthesize_scenario(jax.random.PRNGKey(3), "flash_crowd", spec)
+        t_of = lambda tr: np.asarray(tr.arrival_hours)[np.asarray(tr.valid)]
+        # diurnal: arrivals correlate with the sine phase; baseline doesn't
+        phase = lambda t: np.mean(np.sin(2 * np.pi * t / 24.0))
+        assert phase(t_of(diu)) > phase(t_of(base)) + 0.2
+        # flash crowd: burst window density is several x the baseline's
+        t0 = 0.30 * spec.horizon_hours
+        in_burst = lambda t: ((t >= t0) & (t < t0 + 24.0)).sum()
+        assert in_burst(t_of(fla)) > 3 * max(in_burst(t_of(base)), 1)
+
+    def test_heavy_tail_inflates_lifetimes(self):
+        spec = TraceSpec(horizon_hours=365 * 24.0, arrival_rate=0.3,
+                         max_deployments=8192)
+        base = synthesize_scenario(jax.random.PRNGKey(4), "baseline", spec)
+        hvy = synthesize_scenario(jax.random.PRNGKey(4), "heavy_tail", spec)
+        mu_of = lambda tr: np.asarray(tr.mu)[np.asarray(tr.valid)]
+        assert mu_of(hvy).mean() < mu_of(base).mean()
+
+    def test_batched_shares_arrival_instants(self):
+        tr = synthesize_scenario(jax.random.PRNGKey(5), "batched", SMALL_SPEC)
+        t = np.asarray(tr.arrival_hours)[np.asarray(tr.valid)]
+        assert len(np.unique(t)) < 0.5 * len(t)
+
+
+class TestPresets:
+    def test_trace_presets_mirror_sim_presets(self):
+        """TRACE_FULL/TRACE_CPU stay in lockstep with the paper presets and
+        construct (guards against silent TraceSpec signature drift)."""
+        from repro.configs.paper_cluster import (PAPER_CPU, PAPER_FULL,
+                                                 TRACE_CPU, TRACE_FULL)
+        for trace_spec, sim_cfg in ((TRACE_FULL, PAPER_FULL),
+                                    (TRACE_CPU, PAPER_CPU)):
+            assert trace_spec.horizon_hours == sim_cfg.horizon_hours
+            assert trace_spec.arrival_rate == sim_cfg.arrival_rate
+            assert trace_spec.priors == AZURE_PRIORS
+            # capacity covers ~2x the expected arrivals (burst headroom)
+            expected = sim_cfg.arrival_rate * sim_cfg.horizon_hours
+            assert trace_spec.max_deployments >= 1.5 * expected
+
+
+class TestFitRoundtrip:
+    SPEC = TraceSpec(horizon_hours=365 * 24.0, arrival_rate=0.6,
+                     max_deployments=8192, max_events=16)
+
+    def test_gamma_mle_recovers_known_gamma(self):
+        x = np.asarray(jax.random.gamma(jax.random.PRNGKey(0), 0.31,
+                                        (20_000,))) / 0.58
+        shape, rate = fit_gamma_mle(x)
+        assert shape == pytest.approx(0.31, rel=0.05)
+        assert rate == pytest.approx(0.58, rel=0.05)
+
+    def test_latent_fit_recovers_azure_priors(self):
+        tr = synthesize_scenario(jax.random.PRNGKey(0), "baseline", self.SPEC)
+        fitted, diag = fit_priors(tr, source="latent")
+        errs = prior_relative_errors(fitted, AZURE_PRIORS)
+        assert max(errs.values()) < 0.15, errs
+        assert diag["source"] == "latent"
+
+    def test_observed_fit_recovers_within_loose_tolerance(self):
+        tr = synthesize_scenario(jax.random.PRNGKey(0), "baseline", self.SPEC)
+        fitted, diag = fit_priors(tr, source="observed")
+        errs = prior_relative_errors(fitted, AZURE_PRIORS)
+        assert max(errs.values()) < 0.5, errs
+        # implied population means are much tighter than raw hyperparameters
+        for p in ("mu", "lam", "sig"):
+            want = getattr(AZURE_PRIORS, f"{p}_shape") / getattr(
+                AZURE_PRIORS, f"{p}_rate")
+            got = getattr(fitted, f"{p}_shape") / getattr(fitted, f"{p}_rate")
+            assert got == pytest.approx(want, rel=0.25), p
+
+    def test_auto_prefers_latents_and_falls_back(self, baseline_trace):
+        fitted, diag = fit_priors(baseline_trace)
+        assert diag["source"] == "latent"
+        nolat = baseline_trace._replace(
+            lam=jnp.full_like(baseline_trace.lam, jnp.nan),
+            mu=jnp.full_like(baseline_trace.mu, jnp.nan),
+            sig=jnp.full_like(baseline_trace.sig, jnp.nan))
+        _, diag = fit_priors(nolat)
+        assert diag["source"] == "observed"
+
+
+class TestReplay:
+    def test_trace_source_smoke_and_deterministic(self, baseline_trace,
+                                                  second_run):
+        """Tier-1 trace-replay smoke test (CI): a replayed run produces sane,
+        reproducible metrics through the unchanged scan body."""
+        src = TraceArrivalSource(baseline_trace)
+        run = make_run(CFG, GRID, SECOND, arrival_source=src)
+        pol = make_policy(SECOND, rho=0.2, capacity=CFG.capacity)
+        m1 = run(jax.random.PRNGKey(0), pol)
+        m2 = run(jax.random.PRNGKey(0), pol)
+        assert float(m1.utilization) == float(m2.utilization)
+        assert 0.0 < float(m1.utilization) <= 1.0
+        assert float(m1.arrivals_accepted) <= n_deployments(baseline_trace)
+
+    def test_stream_shapes_and_counts(self, baseline_trace):
+        stream, dropped = trace_to_stream(baseline_trace, CFG)
+        assert stream.c0.shape == (CFG.n_steps, CFG.max_arrivals)
+        assert int(jnp.sum(stream.n_arrivals)) + int(dropped) == \
+            n_deployments(baseline_trace)
+
+    def test_overflow_arrivals_are_counted(self, baseline_trace):
+        tight = CFG._replace(max_arrivals=1)
+        stream, dropped = trace_to_stream(baseline_trace, tight)
+        assert int(dropped) > 0
+        assert int(jnp.max(stream.n_arrivals)) == 1
+
+    def test_non_global_mode_rejected(self, baseline_trace):
+        cfg = CFG._replace(prior_mode=PSEUDO, n_pseudo_obs=5)
+        with pytest.raises(ValueError, match="GLOBAL|global"):
+            trace_to_stream(baseline_trace, cfg)
+
+    def test_replay_matches_prior_sampling(self, second_run):
+        """Matched-priors equivalence: replaying synthesized traces must
+        reproduce the prior-sampled utilization (same config, same policy)
+        within MC noise at this scale."""
+        pol = make_policy(SECOND, rho=0.2, capacity=CFG.capacity)
+        keys = jax.random.split(jax.random.PRNGKey(0), 8)
+        u_prior = float(jnp.mean(
+            jax.vmap(lambda k: second_run(k, pol))(keys).utilization))
+        streams = [
+            trace_to_stream(synthesize_scenario(
+                jax.random.fold_in(jax.random.PRNGKey(5), i), "baseline",
+                SMALL_SPEC), CFG)[0]
+            for i in range(8)]
+        batch = jax.tree.map(lambda *xs: np.stack(xs), *streams)
+        u_rep = float(jnp.mean(jax.vmap(second_run, in_axes=(0, None, 0))(
+            keys, pol, batch).utilization))
+        assert u_rep == pytest.approx(u_prior, rel=0.25)
+
+
+class TestImportanceRouting:
+    def test_simulate_plan_matches_serial_runs(self):
+        run = make_run(CFG, GRID, ZEROTH)
+        pol = make_policy(ZEROTH, threshold=400.0, capacity=CFG.capacity)
+        plan = make_importance_plan(jax.random.PRNGKey(0), CFG, GRID,
+                                    quotas=(3, 3, 3), n_probe=32,
+                                    probe_batch=32)
+        batched = simulate_plan(run, plan, pol)
+        for i in (0, len(plan.weights) - 1):
+            serial = run(jnp.asarray(plan.keys[i]), pol)
+            assert float(batched.utilization[i]) == pytest.approx(
+                float(serial.utilization))
+        est = estimate_from_plan(plan, batched)
+        assert 0.0 <= est["utilization"] <= 1.0
+        assert est["n_runs"] == len(plan.weights)
+
+    def test_run_keyed_batch_matches_vmap(self):
+        run = make_run(CFG, GRID, ZEROTH)
+        pol = make_policy(ZEROTH, threshold=400.0, capacity=CFG.capacity)
+        keys = jax.random.split(jax.random.PRNGKey(1), 3)
+        m1 = run_keyed_batch(run, keys, pol)
+        m2 = jax.vmap(run, in_axes=(0, None))(keys, pol)
+        np.testing.assert_allclose(np.asarray(m1.utilization),
+                                   np.asarray(m2.utilization))
+
+
+@pytest.mark.slow
+class TestQuickPresetEquivalence:
+    """The satellite acceptance check at the quick benchmark preset."""
+
+    def test_quick_preset_replay_equivalence(self):
+        from benchmarks.common import SCALES, grid_for, sim_config
+        from benchmarks.scenarios import trace_spec_for
+
+        scale = SCALES["quick"]
+        cfg = sim_config(scale)
+        grid = grid_for(scale, cfg)
+        spec = trace_spec_for(cfg)
+        run = make_run(cfg, grid, SECOND)
+        pol = make_policy(SECOND, rho=0.112, capacity=cfg.capacity)
+        keys = jax.random.split(jax.random.PRNGKey(0), 4)
+        u_prior = float(jnp.mean(
+            jax.vmap(lambda k: run(k, pol))(keys).utilization))
+        streams = [
+            trace_to_stream(synthesize_scenario(
+                jax.random.fold_in(jax.random.PRNGKey(9), i), "baseline",
+                spec), cfg)[0]
+            for i in range(4)]
+        batch = jax.tree.map(lambda *xs: np.stack(xs), *streams)
+        u_rep = float(jnp.mean(jax.vmap(run, in_axes=(0, None, 0))(
+            keys, pol, batch).utilization))
+        assert u_rep == pytest.approx(u_prior, rel=0.2)
+
+
+@pytest.mark.slow
+def test_scenario_policy_sweep_runs():
+    """Full scenario x policy sweep through the benchmark entry point."""
+    from benchmarks import scenarios
+
+    rows = scenarios.run("tiny", seed=0)
+    names = [r.split(",", 1)[0] for r in rows]
+    for scen in ("baseline", "diurnal", "flash_crowd", "heavy_tail",
+                 "batched"):
+        for pol in ("zeroth", "first", "second"):
+            assert f"scenarios/{scen}/{pol}" in names
+    assert "scenarios/importance_routed" in names
+    assert any(n.startswith("scenarios/fit_roundtrip") for n in names)
