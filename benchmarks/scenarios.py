@@ -8,8 +8,11 @@ modulation, flash crowds, heavy-tail lifetime inflation, correlated
 batches) is replayed through the *same* policies via the trace arrival
 source: the utilization/SLA deltas per scenario measure how robust each
 admission policy is to non-stationary arrivals it was never tuned for.
-Also reports the generate→fit prior round-trip error and the
-importance-sampling plan routed through the sharded ``run_keyed_batch``.
+Also reports the generate→fit prior round-trip error, an
+information-model comparison (the same baseline trace ensemble replayed
+under GLOBAL / §6 PSEUDO / §7 labeled beliefs via the trace-level
+stratified importance plan), and the key-level importance-sampling plan
+routed through the sharded ``run_keyed_batch``.
 
 Cost: the sweep simulates scenarios x policies x n_runs full replays (like
 ``table2``, minutes at the quick scale, ~13 min recorded in
@@ -24,8 +27,10 @@ import jax
 import numpy as np
 
 from repro.core import AZURE_PRIORS, FIRST, SECOND, ZEROTH, make_policy
-from repro.sim import (estimate_from_plan, make_importance_plan, make_run,
-                       simulate_plan, sla_failure_rate)
+from repro.sim import (GLOBAL, MIX_LABELED, PSEUDO, estimate_from_plan,
+                       make_importance_plan, make_run,
+                       make_trace_ensemble_plan, simulate_plan,
+                       simulate_trace_plan, sla_failure_rate)
 from repro.traces import (TraceSpec, fit_priors, prior_relative_errors,
                           scenario_names, synthesize_scenario,
                           trace_to_stream)
@@ -128,6 +133,35 @@ def run(scale_name: str = "tiny", seed: int = 0, tune: bool = False) -> list:
                 f"scenarios/{scen}/{NAMES[kind]}",
                 (time.time() - t0) * 1e6,
                 f"util={util:.4f} sla={sla:.2e} dropped={dropped}{rel}"))
+
+    # -- information-model replay: GLOBAL vs PSEUDO vs labeled ---------------
+    # The paper's headline (§6-§7): richer provider information about the
+    # same arrivals buys utilization at the same policy. Replay one baseline
+    # trace ensemble under each information model (arrivals identical;
+    # beliefs differ) through the trace-level stratified importance plan, so
+    # the comparison oversamples the arrival-side tail instead of averaging
+    # it away.
+    n_ens = max(scale.n_runs, 4)
+    traces = [synthesize_scenario(tk, "baseline", spec)
+              for tk in jax.random.split(jax.random.fold_in(key, 900), n_ens)]
+    pol2 = make_policy(SECOND, rho=tuned[SECOND], capacity=cfg.capacity)
+    for mode, mname in ((GLOBAL, "global"), (PSEUDO, "pseudo"),
+                        (MIX_LABELED, "labeled")):
+        t0 = time.time()
+        mcfg = replay_cfg._replace(prior_mode=mode, n_pseudo_obs=5)
+        streams = [trace_to_stream(tr, mcfg,
+                                   key=jax.random.fold_in(key, 910 + ti))[0]
+                   for ti, tr in enumerate(traces)]
+        plan = make_trace_ensemble_plan(jax.random.fold_in(key, 920), mcfg,
+                                        grid, streams, quotas=(4, 2, 2),
+                                        runs_per_trace=2)
+        metrics = simulate_trace_plan(make_run(mcfg, grid, SECOND), plan,
+                                      streams, pol2)
+        est = estimate_from_plan(plan, metrics)
+        rows.append(csv_row(
+            f"scenarios/info_model/{mname}", (time.time() - t0) * 1e6,
+            f"util={est['utilization']:.4f} sla={est['sla_fail']:.2e}"
+            f" n_runs={est['n_runs']} ensemble={n_ens}"))
 
     # -- importance plan routed through the sharded keyed batch --------------
     t0 = time.time()

@@ -5,7 +5,12 @@ Builds a small simulated cluster, runs the industry-baseline threshold policy
 same SLA target, and prints the utilization gap — the paper's headline result.
 
   PYTHONPATH=src python examples/quickstart.py
+
+Set REPRO_SMOKE=1 (the CI docs job does) to shrink the horizon and run
+count so the script finishes in seconds.
 """
+import os
+
 import jax
 import numpy as np
 
@@ -13,13 +18,16 @@ from repro.core import (AZURE_PRIORS, SECOND, ZEROTH, geometric_grid,
                         make_policy)
 from repro.sim import SimConfig, make_run
 
+SMOKE = os.environ.get("REPRO_SMOKE") == "1"
+
 
 def main():
+    days, n_runs = (60, 2) if SMOKE else (180, 4)
     cfg = SimConfig(capacity=1_000.0, arrival_rate=0.05,
-                    horizon_hours=180 * 24.0, dt=24.0, max_slots=256,
+                    horizon_hours=days * 24.0, dt=24.0, max_slots=256,
                     max_arrivals=4, priors=AZURE_PRIORS)
     grid = geometric_grid(cfg.dt, cfg.horizon_hours * 3, 24)
-    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    keys = jax.random.split(jax.random.PRNGKey(0), n_runs)
 
     results = {}
     for name, kind, pol in [

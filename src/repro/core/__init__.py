@@ -12,7 +12,8 @@ from .processes import (AZURE_PRIORS, DeploymentParams, PopulationPriors,
                         sample_params, sample_step_events, scaleout_rate,
                         sample_pseudo_observations, sample_initial_size)
 from .belief import (GammaBelief, belief_from_prior, update_on_events,
-                     apply_pseudo_observations, observe_initial_size)
+                     apply_pseudo_observations, observe_initial_size,
+                     pseudo_counts_from_observables)
 from .moments import (MomentCurves, aggregate_moment_curves, moment_curves,
                       moment_curves_discrete, moment_curves_fused)
 from .policies import (ZEROTH, FIRST, SECOND, PolicyParams, make_policy,
@@ -25,6 +26,7 @@ __all__ = [
     "sample_step_events", "scaleout_rate", "sample_pseudo_observations",
     "sample_initial_size", "GammaBelief", "belief_from_prior",
     "update_on_events", "apply_pseudo_observations", "observe_initial_size",
+    "pseudo_counts_from_observables",
     "MomentCurves", "aggregate_moment_curves", "moment_curves",
     "moment_curves_discrete", "moment_curves_fused", "ZEROTH",
     "FIRST", "SECOND", "PolicyParams", "make_policy", "geometric_grid",

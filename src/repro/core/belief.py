@@ -97,3 +97,46 @@ def apply_pseudo_observations(bel: GammaBelief, obs: PseudoObservations,
 def observe_initial_size(bel: GammaBelief, c0: jax.Array) -> GammaBelief:
     """The arrival request C0 ~ 1 + Poisson(sig) is itself a size observation."""
     return bel._replace(sig_a=bel.sig_a + (c0 - 1), sig_b=bel.sig_b + 1.0)
+
+
+def pseudo_counts_from_observables(
+    *,
+    core_deaths: jax.Array,
+    exposure_core_hours: jax.Array,
+    n_scaleouts: jax.Array,
+    scaleout_cores: jax.Array,
+    window_hours: jax.Array,
+) -> PseudoObservations:
+    """Provider-side pseudo-counts from a deployment's *observed* history.
+
+    The paper's §6 pseudo observations are k draws from each true scaling
+    process; a recorded trace carries the real thing — the death/scale-out
+    counts and exposures a provider would have logged while the deployment
+    ran. Packing those observables into a ``PseudoObservations`` and folding
+    them through ``apply_pseudo_observations`` yields exactly the conjugate
+    posterior the provider would hold after watching that history:
+
+      * each observed core death is one (censored-exponential) lifetime
+        observation; the core-hour exposure is the Gamma rate increment,
+        so survivors inform mu through exposure alone;
+      * the observation window plays the role of the §6 unit-time windows
+        (``n_windows`` is *hours* here, not a count — the conjugate update
+        only ever uses it as exposure);
+      * each scale-out contributes one size observation with
+        size - 1 summing to ``scaleout_cores - n_scaleouts``.
+
+    Inputs may be malformed real-trace columns; counts are clipped at zero
+    so a bad row degrades to "no information" rather than an improper
+    posterior.
+    """
+    deaths = jnp.maximum(core_deaths, 0.0)
+    n_so = jnp.maximum(n_scaleouts, 0.0)
+    return PseudoObservations(
+        n_lifetimes=deaths,
+        sum_lifetimes=jnp.maximum(exposure_core_hours, 0.0),
+        n_windows=jnp.maximum(window_hours, 0.0),
+        n_scaleouts=n_so,
+        n_sizes=n_so,
+        sum_size_minus1=jnp.maximum(
+            jnp.maximum(scaleout_cores, 0.0) - n_so, 0.0),
+    )

@@ -5,8 +5,10 @@ from .simulator import (AGG_FUSED, AGG_KERNEL, AGG_REFERENCE, GLOBAL, PSEUDO,
                         SimConfig, draw_arrival_stream, make_config, make_run,
                         run_batch, run_keyed_batch)
 from .metrics import CI, bca_ci, sla_failure_rate, weighted_mean
-from .importance import (ImportancePlan, badness_measure, estimate_from_plan,
-                         make_importance_plan, rejection_q, simulate_plan)
+from .importance import (ImportancePlan, TraceEnsemblePlan, badness_measure,
+                         estimate_from_plan, make_importance_plan,
+                         make_trace_ensemble_plan, rejection_q, simulate_plan,
+                         simulate_trace_plan, stream_badness)
 
 __all__ = [
     "AGG_FUSED", "AGG_KERNEL", "AGG_REFERENCE", "GLOBAL", "PSEUDO",
@@ -15,6 +17,7 @@ __all__ = [
     "SimConfig", "draw_arrival_stream", "make_config", "make_run",
     "run_batch", "run_keyed_batch",
     "CI", "bca_ci", "sla_failure_rate", "weighted_mean", "ImportancePlan",
-    "badness_measure", "estimate_from_plan", "make_importance_plan",
-    "rejection_q", "simulate_plan",
+    "TraceEnsemblePlan", "badness_measure", "estimate_from_plan",
+    "make_importance_plan", "make_trace_ensemble_plan", "rejection_q",
+    "simulate_plan", "simulate_trace_plan", "stream_badness",
 ]

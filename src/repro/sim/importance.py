@@ -22,6 +22,12 @@ We implement:
   * ``simulate_plan`` / ``estimate_from_plan`` — run every selected key
     through the device-sharded ``run_keyed_batch`` (no serial per-run loop
     in callers) and combine the metrics with the stratified weights.
+  * ``stream_badness`` / ``make_trace_ensemble_plan`` /
+    ``simulate_trace_plan`` — the trace-replay analogue: replay is
+    arrival-deterministic per trace, so the BM bucketing moves from run
+    keys to *traces*; an ensemble of replay streams is probed in one
+    vmapped pass, bad traces are oversampled, and (trace, run-key) pairs
+    route through the same sharded batch (keys + streams sharded together).
 """
 from __future__ import annotations
 
@@ -56,14 +62,28 @@ def badness_measure(key: jax.Array, cfg: SimConfig, grid: jax.Array,
     Splits ``key`` exactly like ``simulator.make_run``'s run() so the BM
     describes the same arrival stream the expensive simulation will see.
     ``source`` selects the arrival backend (default: prior sampling); with a
-    trace-replay source the stream — and therefore BM — is key-independent,
-    so stratification degenerates to a single bucket, which is correct: a
-    fixed trace has no arrival-side tail to oversample.
+    *single* trace-replay source the stream — and therefore BM — is
+    key-independent, so stratification degenerates to a single bucket. An
+    arrival-side tail then only exists *across* traces: bucket a trace
+    ensemble instead via ``make_trace_ensemble_plan``/``stream_badness``.
     """
     k_stream, k_scan = jax.random.split(key)
     k_life = jax.random.fold_in(k_scan, 99)
     stream = (draw_arrival_stream(k_stream, cfg) if source is None
               else source.stream(k_stream, cfg))
+    return stream_badness(k_life, stream, cfg, grid)
+
+
+def stream_badness(k_life: jax.Array, stream: ArrivalStream, cfg: SimConfig,
+                   grid: jax.Array) -> jax.Array:
+    """Def.-5 badness of a *given* pre-drawn arrival stream.
+
+    ``k_life`` draws only the simplified schedule's max-lifetime clocks; the
+    arrival side (who arrives when, how large, with what true parameters) is
+    entirely the stream's. This is the primitive trace-level bucketing
+    builds on: replay streams are arrival-deterministic per trace, so BM
+    computed here ranks *traces*, not run keys.
+    """
     t_steps, a_max = stream.c0.shape
     n_dep = t_steps * a_max
 
@@ -221,11 +241,118 @@ def simulate_plan(run_fn, plan: ImportancePlan, policy, *,
                            devices=devices)
 
 
-def estimate_from_plan(plan: ImportancePlan, metrics: RunMetrics) -> dict:
-    """Stratified estimates from a simulated plan: weighted utilization and
-    the aggregate SLA failure rate (weights are the estimated bucket masses
-    spread over each bucket's runs, so rare bad runs count at their true
-    probability)."""
+# ---------------------------------------------------------------------------
+# Trace-ensemble importance sampling
+#
+# Replay is arrival-stream-deterministic per trace: every run key sees the
+# same arrivals, so key-level BM bucketing (the prior-sampled scheme above)
+# collapses to one bucket. The arrival-side tail lives *across* traces —
+# a few ensemble members carry the early heavy arrivals that drive SLA
+# failures — so stratification moves up a level: bucket the ensemble by
+# per-trace BM, oversample the bad traces, and spread each bucket's
+# probability mass over its selected (trace, run-key) pairs.
+# ---------------------------------------------------------------------------
+
+
+class TraceEnsemblePlan(NamedTuple):
+    trace_idx: np.ndarray  # [R] ensemble index of each selected run's trace
+    keys: np.ndarray       # [R, 2] uint32 run keys (within-run randomness)
+    weights: np.ndarray    # [R] stratified weights (sum to ~1)
+    buckets: np.ndarray    # [R] bucket index per selected run
+    p_bucket: np.ndarray   # [K] estimated bucket probabilities over traces
+    bm_trace: np.ndarray   # [n_traces] BM per ensemble member (diagnostics)
+
+
+def _stack_streams(streams: Sequence[ArrivalStream],
+                   idx=None) -> ArrivalStream:
+    picked = streams if idx is None else [streams[i] for i in idx]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *picked)
+
+
+def make_trace_ensemble_plan(
+    key: jax.Array,
+    cfg: SimConfig,
+    grid: jax.Array,
+    streams: Sequence[ArrivalStream],
+    *,
+    quotas: Sequence[int] = (8, 4, 4),
+    edges_frac: Sequence[float] = (1.25, 1.5),
+    runs_per_trace: int = 1,
+) -> TraceEnsemblePlan:
+    """Stratified plan over a *trace ensemble*'s BM buckets.
+
+    ``streams`` are pre-built arrival streams (``traces.trace_to_stream``
+    output), one per ensemble member; each is an iid draw of the arrival
+    process, so the empirical bucket frequencies estimate p(I_i) exactly as
+    the key probe does in ``make_importance_plan``. Up to ``quotas[i]``
+    traces are selected per bucket and each gets ``runs_per_trace``
+    independent run keys (within-run randomness still varies per key even
+    though arrivals do not); a run's weight is
+    ``p_bucket / (n_selected_traces * runs_per_trace)``. Buckets the
+    ensemble never hits keep weight 0, as in the key-level plan.
+
+    The whole ensemble is BM-probed in one vmapped pass (per-trace keys
+    drive only the simplified schedule's lifetime clocks).
+    """
+    edges = np.asarray(edges_frac) * cfg.capacity
+    n_traces = len(streams)
+    if n_traces == 0:
+        raise ValueError("trace ensemble is empty")
+    k_bm, k_run = jax.random.split(key)
+    bm_fn = jax.jit(jax.vmap(
+        lambda k, s: stream_badness(k, s, cfg, grid)))
+    bm = np.asarray(bm_fn(jax.random.split(k_bm, n_traces),
+                          _stack_streams(streams)))
+    bucket = np.digitize(bm, edges)
+    k_buckets = len(edges) + 1
+    p_hat = np.array([(bucket == i).mean() for i in range(k_buckets)])
+
+    run_keys = np.asarray(
+        jax.random.split(k_run, n_traces * runs_per_trace)
+    ).reshape(n_traces, runs_per_trace, -1)
+    sel_idx, sel_keys, sel_w, sel_b = [], [], [], []
+    for i in range(k_buckets):
+        idx = np.nonzero(bucket == i)[0][: quotas[i]]
+        if len(idx) == 0:
+            continue
+        w = p_hat[i] / (len(idx) * runs_per_trace)
+        for j in idx:
+            for r in range(runs_per_trace):
+                sel_idx.append(int(j))
+                sel_keys.append(run_keys[j, r])
+                sel_w.append(w)
+                sel_b.append(i)
+    return TraceEnsemblePlan(
+        trace_idx=np.asarray(sel_idx),
+        keys=np.stack(sel_keys),
+        weights=np.asarray(sel_w),
+        buckets=np.asarray(sel_b),
+        p_bucket=p_hat,
+        bm_trace=bm,
+    )
+
+
+def simulate_trace_plan(run_fn, plan: TraceEnsemblePlan,
+                        streams: Sequence[ArrivalStream], policy, *,
+                        devices=None) -> RunMetrics:
+    """Simulate a trace-ensemble plan through the sharded keyed batch.
+
+    Pairs each selected run key with its trace's pre-built stream and routes
+    the whole batch through ``run_keyed_batch`` (keys and streams sharded
+    together over the device mesh). Returns per-run metrics in plan order;
+    combine with ``plan.weights`` via ``estimate_from_plan``.
+    """
+    batch = _stack_streams(streams, plan.trace_idx)
+    return run_keyed_batch(run_fn, jnp.asarray(plan.keys), policy,
+                           streams=batch, devices=devices)
+
+
+def estimate_from_plan(plan, metrics: RunMetrics) -> dict:
+    """Stratified estimates from a simulated plan (key-level
+    ``ImportancePlan`` or trace-level ``TraceEnsemblePlan`` — only the
+    weights are consumed): weighted utilization and the aggregate SLA
+    failure rate (weights are the estimated bucket masses spread over each
+    bucket's runs, so rare bad runs count at their true probability)."""
     w = plan.weights
     return {
         "utilization": weighted_mean(np.asarray(metrics.utilization), w),

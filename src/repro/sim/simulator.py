@@ -460,20 +460,23 @@ def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int,
 
 
 def shard_batch_over_devices(batched, devices, axis: str,
-                             n_replicated_args: int = 0):
+                             n_replicated_args: int = 0,
+                             n_batch_args: int = 1):
     """jit(shard_map(batched)) over a 1-d device mesh named ``axis``.
 
-    ``batched`` maps a leading-axis batch (plus ``n_replicated_args``
-    broadcast arguments) to a pytree with the same leading axis; the batch is
-    split across devices, replicated args go everywhere. Shared by
-    ``run_batch`` and the importance-sampling probe loop.
+    ``batched`` maps ``n_batch_args`` leading-axis batches (plus
+    ``n_replicated_args`` trailing broadcast arguments) to a pytree with the
+    same leading axis; the batches are split across devices, replicated args
+    go everywhere. Shared by ``run_batch`` (one batch arg: keys), the
+    trace-ensemble path (two: keys + a stream batch), and the
+    importance-sampling probe loop.
     """
     from jax.sharding import Mesh, PartitionSpec as P
 
     from ..compat import shard_map
 
     mesh = Mesh(np.asarray(devices), (axis,))
-    in_specs = (P(axis),) + (P(),) * n_replicated_args
+    in_specs = (P(axis),) * n_batch_args + (P(),) * n_replicated_args
     return jax.jit(shard_map(batched, mesh=mesh, in_specs=in_specs,
                              out_specs=P(axis), check_vma=False))
 
@@ -487,7 +490,8 @@ _SHARDED_RUN_CACHE_MAX = 8
 
 
 def run_keyed_batch(run_fn, keys: jax.Array, policy: PolicyParams,
-                    *, devices=None) -> RunMetrics:
+                    *, streams: Optional[ArrivalStream] = None,
+                    devices=None) -> RunMetrics:
     """Simulate an explicit ``[R, ...]`` batch of PRNG keys: vmap over runs,
     shard_map over devices.
 
@@ -501,26 +505,40 @@ def run_keyed_batch(run_fn, keys: jax.Array, policy: PolicyParams,
     Taking keys (not a count) is what lets the importance-sampling estimator
     route its pre-selected ``ImportancePlan.keys`` through the same sharded
     path as ordinary batches (see ``importance.simulate_plan``).
+
+    ``streams`` (optional) is a leading-axis ``[R, ...]`` batch of pre-built
+    ``ArrivalStream``\\ s, one per run, sharded alongside the keys — the
+    trace-ensemble importance path uses this to pair each selected replay
+    stream with its run key (see ``importance.simulate_trace_plan``).
     """
     keys = jnp.asarray(keys)
     n_runs = keys.shape[0]
     devices = tuple(jax.devices() if devices is None else devices)
     n_dev = len(devices)
+    if streams is None:
+        batched = jax.vmap(run_fn, in_axes=(0, None))
+        args = (keys, policy)
+        n_batch = 1
+    else:
+        batched = jax.vmap(lambda k, s, p: run_fn(k, p, s),
+                           in_axes=(0, 0, None))
+        args = (keys, streams, policy)
+        n_batch = 2
     if n_dev <= 1 or n_runs % n_dev != 0:
-        return jax.vmap(run_fn, in_axes=(0, None))(keys, policy)
+        return batched(*args)
 
-    cache_key = (run_fn, devices)
+    cache_key = (run_fn, devices, n_batch)
     sharded = _SHARDED_RUN_CACHE.get(cache_key)
     if sharded is None:
-        sharded = shard_batch_over_devices(
-            jax.vmap(run_fn, in_axes=(0, None)), devices, "runs",
-            n_replicated_args=1)
+        sharded = shard_batch_over_devices(batched, devices, "runs",
+                                           n_replicated_args=1,
+                                           n_batch_args=n_batch)
         _SHARDED_RUN_CACHE[cache_key] = sharded
         while len(_SHARDED_RUN_CACHE) > _SHARDED_RUN_CACHE_MAX:
             _SHARDED_RUN_CACHE.popitem(last=False)
     else:
         _SHARDED_RUN_CACHE.move_to_end(cache_key)
-    return sharded(keys, policy)
+    return sharded(*args)
 
 
 def run_batch(run_fn, key: jax.Array, policy: PolicyParams, n_runs: int,

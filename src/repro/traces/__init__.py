@@ -14,7 +14,12 @@ makes the repo trace-driven end to end:
     ``PopulationPriors`` from any trace (latent or observables-only),
     closing the generate → fit → Table-1 loop.
   * ``replay``  — ``TraceArrivalSource``: any trace as a simulator arrival
-    backend.
+    backend, under every information model — GLOBAL, §6 pseudo
+    observations (sampled from trace latents or formed from the logged
+    observables), and the §7 labeled/unlabeled type mixtures.
+  * ``ingest``  — Cortez/Azure-format VM-table CSV → ``WorkloadTrace``
+    (schema mapping, unit normalization, dt re-bucketing, malformed-row
+    accounting), so fitting and replay run on real trace data.
 
 ArrivalSource contract (see ``sim.simulator.ArrivalSource``): a source's
 ``stream(key, cfg)`` returns the same pre-drawn ``[n_steps, max_arrivals]``
@@ -40,7 +45,10 @@ from .synth import (Scenario, TraceSpec, get_scenario, register_scenario,
                     scenario_names, synthesize_scenario, synthesize_trace)
 from .fit import (fit_gamma_mle, fit_gamma_moments, fit_priors,
                   prior_relative_errors)
-from .replay import TraceArrivalSource, params_from_trace, trace_to_stream
+from .replay import (PSEUDO_AUTO, PSEUDO_LATENT, PSEUDO_OBSERVED,
+                     TraceArrivalSource, params_from_trace, trace_to_stream)
+from .ingest import (AZURE_2017_POSITIONAL, CortezSchema, ingest_cortez_csv,
+                     parse_core_bucket)
 
 __all__ = [
     "ScaleoutEvents", "WorkloadTrace", "events_csv_path", "has_latents",
@@ -50,5 +58,8 @@ __all__ = [
     "scenario_names", "synthesize_scenario", "synthesize_trace",
     "fit_gamma_mle", "fit_gamma_moments", "fit_priors",
     "prior_relative_errors",
+    "PSEUDO_AUTO", "PSEUDO_LATENT", "PSEUDO_OBSERVED",
     "TraceArrivalSource", "params_from_trace", "trace_to_stream",
+    "AZURE_2017_POSITIONAL", "CortezSchema", "ingest_cortez_csv",
+    "parse_core_bucket",
 ]

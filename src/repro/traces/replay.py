@@ -15,21 +15,57 @@ lacks them (a real observed trace), per-deployment conjugate posterior
 means under ``cfg.priors`` are imputed from the trace's observables —
 exactly the Gamma updates of ``core.belief``, applied trace-side.
 
-Provider beliefs are the population prior plus the C0 size observation,
-i.e. the paper's GLOBAL information model; the richer §6/§7 modes encode
-provider-side knowledge that a bare trace does not carry, so replay
-rejects those configs loudly rather than silently degrading.
+Information models (``cfg.prior_mode``) are all supported on replay:
+
+  * GLOBAL — belief = population prior + the C0 size observation (the
+    paper's baseline; no per-deployment key randomness, so the stream is
+    fully determined by the trace).
+  * PSEUDO (§6) — the provider holds deployment-specific prior knowledge.
+    Two constructions, selected by ``pseudo_source``:
+      - ``"latent"`` (synthetic traces): sample ``cfg.n_pseudo_obs``
+        pseudo observations from the trace's own latent parameters with
+        ``core.processes.sample_pseudo_observations`` — distributionally
+        identical to ``draw_arrival_stream``'s PSEUDO path, which is what
+        makes replayed and prior-sampled PSEUDO runs statistically
+        equivalent on matched arrivals (tested in test_traces.py).
+      - ``"observed"`` (real traces): form deterministic pseudo-counts
+        from the trace's logged observables — death counts, core-hour
+        exposure, scale-out counts/sizes, observation window — via
+        ``core.belief.pseudo_counts_from_observables`` and the existing
+        conjugate updates. This models a provider who had previously
+        watched exactly the history the trace records; ``n_pseudo_obs``
+        is ignored because the trace defines its own information content.
+  * MIX_LABELED / MIX_UNLABELED (§7) — the submitted deployment is the
+    trace row (belief as in PSEUDO); the alternative user type, which a
+    bare trace cannot carry, is imputed as an independent draw from
+    ``cfg.priors`` with its own ``n_pseudo_obs`` pseudo observations —
+    the same imputation ``draw_arrival_stream`` uses for its alt type.
+
+PSEUDO-latent and the §7 modes consume the ``key`` passed to
+``trace_to_stream`` / ``ArrivalSource.stream`` for the belief-side
+randomness only: arrivals remain trace-determined, but two runs with
+different keys see (correctly) different provider beliefs, exactly as in
+prior-sampled mode.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..core.belief import belief_from_prior, observe_initial_size
-from ..core.processes import DeploymentParams, PopulationPriors
-from ..sim.simulator import (GLOBAL, ArrivalSource, ArrivalStream, SimConfig,
+from ..core.belief import (apply_pseudo_observations, belief_from_prior,
+                           observe_initial_size,
+                           pseudo_counts_from_observables)
+from ..core.processes import (DeploymentParams, PopulationPriors,
+                              PseudoObservations, sample_params,
+                              sample_pseudo_observations)
+from ..sim.simulator import (GLOBAL, MIX_LABELED, MIX_UNLABELED, PSEUDO,
+                             ArrivalSource, ArrivalStream, SimConfig,
                              _validate_config)
-from .schema import WorkloadTrace, validate_trace
+from .schema import WorkloadTrace, has_latents, validate_trace
+
+PSEUDO_LATENT, PSEUDO_OBSERVED, PSEUDO_AUTO = "latent", "observed", "auto"
 
 
 def params_from_trace(trace: WorkloadTrace,
@@ -57,13 +93,52 @@ def params_from_trace(trace: WorkloadTrace,
     )
 
 
-def trace_to_stream(trace: WorkloadTrace,
-                    cfg: SimConfig) -> tuple[ArrivalStream, jax.Array]:
+def _resolve_pseudo_source(trace: WorkloadTrace, pseudo_source: str) -> str:
+    if pseudo_source not in (PSEUDO_LATENT, PSEUDO_OBSERVED, PSEUDO_AUTO):
+        raise ValueError(f"unknown pseudo_source {pseudo_source!r}")
+    if pseudo_source != PSEUDO_AUTO:
+        return pseudo_source
+    if isinstance(trace.arrival_hours, jax.core.Tracer):
+        raise ValueError(
+            "pseudo_source='auto' cannot inspect a traced trace; pass "
+            "pseudo_source='latent' or 'observed' explicitly")
+    return PSEUDO_LATENT if has_latents(trace) else PSEUDO_OBSERVED
+
+
+def _trace_pseudo_obs(trace: WorkloadTrace, cfg: SimConfig, source: str,
+                      key: Optional[jax.Array]) -> PseudoObservations:
+    """[D]-shaped pseudo observations for the trace's own deployments."""
+    if source == PSEUDO_OBSERVED:
+        return pseudo_counts_from_observables(
+            core_deaths=trace.n_core_deaths,
+            exposure_core_hours=trace.core_hours,
+            n_scaleouts=trace.n_scaleouts,
+            scaleout_cores=trace.scaleout_cores,
+            window_hours=trace.obs_window,
+        )
+    if key is None:
+        raise ValueError(
+            f"prior_mode={cfg.prior_mode!r} with pseudo_source='latent' "
+            "samples pseudo observations and needs a PRNG key: pass key= to "
+            "trace_to_stream (TraceArrivalSource forwards its stream key)")
+    params = DeploymentParams(lam=trace.lam, mu=trace.mu, sig=trace.sig)
+    return sample_pseudo_observations(key, params, cfg.priors,
+                                      cfg.n_pseudo_obs)
+
+
+def trace_to_stream(trace: WorkloadTrace, cfg: SimConfig,
+                    key: Optional[jax.Array] = None,
+                    pseudo_source: str = PSEUDO_AUTO,
+                    ) -> tuple[ArrivalStream, jax.Array]:
     """Scatter a trace into the simulator's pre-drawn arrival layout.
 
     Returns ``(stream, n_dropped)`` where ``n_dropped`` counts arrivals lost
     to the per-step ``max_arrivals`` cap (arrivals beyond ``cfg``'s horizon
     are simply outside the replayed window and not counted as drops).
+
+    ``key`` feeds the belief-side sampling of the PSEUDO-latent and §7
+    modes (see the module docstring); GLOBAL and PSEUDO-observed replay is
+    deterministic and ignores it.
     """
     _validate_config(cfg)
     # the cumulative-rank scatter below assumes sorted valid arrivals; a
@@ -72,10 +147,6 @@ def trace_to_stream(trace: WorkloadTrace,
     # responsible (TraceArrivalSource validates at construction).
     if not isinstance(trace.arrival_hours, jax.core.Tracer):
         validate_trace(trace)
-    if cfg.prior_mode != GLOBAL:
-        raise ValueError(
-            f"trace replay supports prior_mode={GLOBAL!r} only (a trace does "
-            f"not carry the provider-side knowledge of {cfg.prior_mode!r})")
     t_steps, a_max = cfg.n_steps, cfg.max_arrivals
     step = jnp.floor(trace.arrival_hours / cfg.dt).astype(jnp.int32)
     ok = trace.valid & (trace.arrival_hours < cfg.horizon_hours) & (step >= 0)
@@ -101,29 +172,75 @@ def trace_to_stream(trace: WorkloadTrace,
     c0 = scatter(trace.c0.astype(jnp.float32), 1.0)
     n_arrivals = jnp.minimum(counts, a_max)
 
-    bel = belief_from_prior(cfg.priors, (t_steps, a_max))
+    prior = belief_from_prior(cfg.priors, (t_steps, a_max))
+    if cfg.prior_mode == GLOBAL:
+        bel = prior
+        bel_alt = bel
+    else:
+        source = _resolve_pseudo_source(trace, pseudo_source)
+        k_own = k_alt_par = k_alt_obs = None
+        if key is not None:
+            k_own, k_alt_par, k_alt_obs = jax.random.split(key, 3)
+        obs = _trace_pseudo_obs(trace, cfg, source, k_own)
+        # scatter the [D] pseudo-counts into the [T, A] layout (empty slots
+        # get zero counts, i.e. the bare prior) and fold them in through the
+        # conjugate update — the same path draw_arrival_stream takes.
+        obs = PseudoObservations(*(scatter(jnp.asarray(f, jnp.float32), 0.0)
+                                   for f in obs))
+        bel = apply_pseudo_observations(prior, obs, cfg.priors)
+        if cfg.prior_mode == PSEUDO:
+            bel_alt = bel
+        else:
+            # §7: the alternative user type is not in the trace; impute it
+            # as an independent prior draw with its own pseudo observations,
+            # mirroring draw_arrival_stream's alt-type construction.
+            if key is None:
+                raise ValueError(
+                    f"prior_mode={cfg.prior_mode!r} imputes the §7 "
+                    "alternative type and needs a PRNG key: pass key= to "
+                    "trace_to_stream (TraceArrivalSource forwards its "
+                    "stream key)")
+            alt = sample_params(k_alt_par, cfg.priors, (t_steps, a_max))
+            obs_alt = sample_pseudo_observations(k_alt_obs, alt, cfg.priors,
+                                                 cfg.n_pseudo_obs)
+            bel_alt = apply_pseudo_observations(prior, obs_alt, cfg.priors)
     bel = observe_initial_size(bel, c0)
-    return ArrivalStream(params=params, c0=c0, bel=bel, bel_alt=bel,
+    return ArrivalStream(params=params, c0=c0, bel=bel, bel_alt=bel_alt,
                          n_arrivals=n_arrivals), n_dropped
 
 
 class TraceArrivalSource(ArrivalSource):
     """Replay a fixed ``WorkloadTrace`` through ``make_run``.
 
-    The run key no longer influences arrivals (they are the trace), only the
-    within-run event randomness; two runs with different keys against the
-    same source share an arrival stream, which is exactly the trace-driven
-    evaluation mode of the benchmarks.
+    The run key no longer influences *arrivals* (they are the trace) — under
+    GLOBAL and PSEUDO-observed replay two runs with different keys share the
+    whole arrival stream, which is exactly the trace-driven evaluation mode
+    of the benchmarks. Under PSEUDO-latent and the §7 modes the key still
+    drives the belief-side sampling (pseudo observations, imputed alt
+    type), matching ``PriorArrivalSource``'s per-run belief randomness.
+
+    ``pseudo_source`` (default ``"auto"``) picks how PSEUDO/§7 beliefs are
+    built: ``"latent"`` samples from the trace's latent parameters,
+    ``"observed"`` forms conjugate pseudo-counts from the logged
+    observables; ``"auto"`` resolves at construction from
+    ``has_latents(trace)``.
     """
 
-    def __init__(self, trace: WorkloadTrace):
+    def __init__(self, trace: WorkloadTrace, pseudo_source: str = PSEUDO_AUTO):
         self.trace = validate_trace(trace)
+        self.pseudo_source = _resolve_pseudo_source(trace, pseudo_source)
 
     def stream(self, key: jax.Array, cfg: SimConfig) -> ArrivalStream:
-        del key  # arrivals are the trace; the run key drives the scan only
-        stream, _ = trace_to_stream(self.trace, cfg)
+        stream, _ = trace_to_stream(self.trace, cfg, key=key,
+                                    pseudo_source=self.pseudo_source)
         return stream
 
     def n_dropped(self, cfg: SimConfig) -> int:
-        """Arrivals lost to the max_arrivals cap under ``cfg`` (host value)."""
-        return int(trace_to_stream(self.trace, cfg)[1])
+        """Arrivals lost to the max_arrivals cap under ``cfg`` (host value).
+
+        Drops depend only on arrival placement, never on beliefs, so the
+        count is taken under GLOBAL — skipping the pseudo-observation and
+        §7 alt-type sampling the real information model would pay for.
+        """
+        return int(trace_to_stream(self.trace,
+                                   cfg._replace(prior_mode=GLOBAL))[1])

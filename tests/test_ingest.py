@@ -1,0 +1,216 @@
+"""Cortez/Azure-format ingestion: fixture round-trip, schema mapping,
+unit normalization, dt re-bucketing, and malformed-row accounting."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import make_policy, SECOND, geometric_grid
+from repro.sim import make_config, make_run, PSEUDO
+from repro.traces import (AZURE_2017_POSITIONAL, CortezSchema,
+                          TraceArrivalSource, fit_priors, has_latents,
+                          ingest_cortez_csv, n_deployments,
+                          parse_core_bucket, validate_trace)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "azure_cortez_sample.csv")
+
+
+def write_csv(path, rows, header=("vmid", "subscriptionid", "deploymentid",
+                                  "vmcreated", "vmdeleted", "maxcpu",
+                                  "avgcpu", "p95maxcpu", "vmcategory",
+                                  "vmcorecountbucket", "vmmemorybucket")):
+    import csv
+
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        if header is not None:
+            w.writerow(header)
+        w.writerows(rows)
+    return str(path)
+
+
+def vm(vmid, dep, created, deleted, cores, sub="sub-x"):
+    return [vmid, sub, dep, str(created),
+            "" if deleted is None else str(deleted), "50.0", "25.0", "45.0",
+            "Unknown", str(cores), "4"]
+
+
+class TestFixtureRoundtrip:
+    """PR-3 acceptance: the checked-in Cortez-format sample ingests into a
+    WorkloadTrace that fit_priors(source="observed") accepts."""
+
+    def test_fixture_ingests_and_fits(self):
+        trace, diag = ingest_cortez_csv(FIXTURE)
+        validate_trace(trace)
+        assert diag["n_malformed"] == 0
+        assert diag["has_header"] is True
+        assert n_deployments(trace) >= 8
+        assert not has_latents(trace)  # real traces carry observables only
+        fitted, fdiag = fit_priors(trace, source="observed")
+        assert fdiag["source"] == "observed"
+        for f in fitted._fields:
+            assert np.isfinite(getattr(fitted, f)), f
+        for f in ("mu_shape", "mu_rate", "lam_shape", "lam_rate",
+                  "sig_shape", "sig_rate", "delta"):
+            assert getattr(fitted, f) > 0.0, f
+
+    def test_fixture_replays_with_observed_pseudo_beliefs(self):
+        """Real-trace replay under the §6 information model end to end."""
+        trace, _ = ingest_cortez_csv(FIXTURE)
+        horizon = float(np.asarray(trace.horizon_hours))
+        dt = 24.0
+        n_steps = int(horizon // dt)
+        cfg = make_config(capacity=200.0, arrival_rate=0.05,
+                          horizon_hours=n_steps * dt, dt=dt, max_slots=64,
+                          max_arrivals=8, d_points=8, prior_mode=PSEUDO)
+        src = TraceArrivalSource(trace)
+        assert src.pseudo_source == "observed"
+        grid = geometric_grid(dt, 3 * horizon, 8)
+        run = make_run(cfg, grid, SECOND, arrival_source=src)
+        pol = make_policy(SECOND, rho=0.2, capacity=cfg.capacity)
+        m = run(jax.random.PRNGKey(0), pol)
+        assert 0.0 < float(m.utilization) <= 1.0
+
+
+class TestMalformedRows:
+    def test_malformed_rows_counted_not_kept(self, tmp_path):
+        rows = [
+            vm("vm-1", "dep-a", 0, 7200, 2),
+            vm("vm-2", "dep-a", 3600, 10800, 1),
+            ["vm-short", "sub-x", "dep-a"],               # too few columns
+            vm("vm-3", "dep-b", "notanumber", 7200, 2),   # unparsable time
+            vm("vm-4", "dep-b", 7200, 3600, 2),           # deleted < created
+            vm("vm-5", "dep-b", -100, 7200, 2),           # negative created
+            vm("vm-6", "dep-b", 0, 7200, 0),              # nonpositive cores
+            vm("vm-7", "", 0, 7200, 2),                   # missing dep id
+            vm("vm-8", "dep-b", 0, 7200, "??"),           # unparsable cores
+            vm("vm-9", "dep-b", 0, 7200, "nan"),          # non-finite cores
+            vm("vm-10", "dep-b", 0, 7200, "inf"),         # non-finite cores
+            vm("vm-11", "dep-b", 7200, None, 4),          # good (censored)
+        ]
+        p = write_csv(tmp_path / "bad.csv", rows)
+        trace, diag = ingest_cortez_csv(p)
+        assert diag["n_malformed"] == 9
+        assert diag["n_vms"] == 3
+        assert n_deployments(trace) == 2
+
+    def test_all_rows_malformed_raises(self, tmp_path):
+        p = write_csv(tmp_path / "allbad.csv",
+                      [vm("vm-1", "dep-a", "x", 1, 1)])
+        with pytest.raises(ValueError, match="no well-formed"):
+            ingest_cortez_csv(p)
+
+    def test_missing_header_column_raises(self, tmp_path):
+        p = write_csv(tmp_path / "nohdr.csv", [vm("vm-1", "dep-a", 0, 1, 1)],
+                      header=("a", "b", "c"))
+        with pytest.raises(ValueError, match="not found in"):
+            ingest_cortez_csv(p)
+
+
+class TestUnitsAndSchema:
+    def test_seconds_to_hours_and_origin_shift(self, tmp_path):
+        # first creation at 3600s becomes t=0; the second deployment
+        # arrives 2h later; a 7200s lifetime is 2 core-hours per core
+        rows = [vm("vm-1", "dep-a", 3600, 10800, 1),
+                vm("vm-2", "dep-b", 10800, 18000, 2)]
+        p = write_csv(tmp_path / "units.csv", rows)
+        trace, diag = ingest_cortez_csv(p)
+        v = np.asarray(trace.valid)
+        t = np.asarray(trace.arrival_hours)[v]
+        np.testing.assert_allclose(t, [0.0, 2.0])
+        np.testing.assert_allclose(np.asarray(trace.obs_window)[v],
+                                   [2.0, 2.0])
+        np.testing.assert_allclose(np.asarray(trace.core_hours)[v],
+                                   [2.0, 4.0])
+        assert diag["horizon_hours"] == pytest.approx(4.0)
+
+    def test_custom_time_unit(self, tmp_path):
+        # timestamps already in hours: time_unit_seconds=3600
+        rows = [vm("vm-1", "dep-a", 0, 5, 1)]
+        p = write_csv(tmp_path / "hours.csv", rows)
+        trace, _ = ingest_cortez_csv(
+            p, schema=CortezSchema(time_unit_seconds=3600.0))
+        assert float(np.asarray(trace.obs_window)[0]) == pytest.approx(5.0)
+
+    def test_open_core_bucket(self):
+        assert parse_core_bucket("4") == 4.0
+        assert parse_core_bucket(" >24 ") == 24.0
+        assert parse_core_bucket(">24", open_bucket_scale=1.25) == 30.0
+        with pytest.raises(ValueError):
+            parse_core_bucket("many")
+
+    def test_headerless_positional_schema(self, tmp_path):
+        rows = [vm("vm-1", "dep-a", 0, 7200, 2),
+                vm("vm-2", "dep-a", 0, None, 4)]
+        p = write_csv(tmp_path / "raw.csv", rows, header=None)
+        trace, diag = ingest_cortez_csv(p, schema=AZURE_2017_POSITIONAL)
+        assert diag["has_header"] is False
+        assert diag["n_vms"] == 2
+        assert float(np.asarray(trace.c0)[0]) == 6.0
+
+
+class TestModelMapping:
+    def test_scaleouts_deaths_and_censoring(self, tmp_path):
+        # dep-a: 2 initial cores; +4 cores at t=1h (scale-out); the initial
+        # VM dies at t=2h (core death); the scale-out VM survives to the
+        # horizon set by dep-b (censored => no spontaneous death).
+        # dep-b: all VMs gone before horizon => spontaneous shutdown, and
+        # its early deletion is a death while the final one is not.
+        rows = [vm("vm-1", "dep-a", 0, 7200, 2),
+                vm("vm-2", "dep-a", 3600, None, 4),
+                vm("vm-3", "dep-b", 0, 3600, 1),
+                vm("vm-4", "dep-b", 0, 14400, 8)]
+        p = write_csv(tmp_path / "model.csv", rows,)
+        trace, _ = ingest_cortez_csv(p, horizon_hours=6.0)
+        v = np.asarray(trace.valid)
+        assert v.sum() == 2
+        c0 = np.asarray(trace.c0)[v]
+        n_so = np.asarray(trace.n_scaleouts)[v]
+        so_cores = np.asarray(trace.scaleout_cores)[v]
+        deaths = np.asarray(trace.n_core_deaths)[v]
+        spont = np.asarray(trace.spont_death)[v]
+        ev_valid = np.asarray(trace.events.valid)[v]
+        np.testing.assert_allclose(c0, [2.0, 9.0])
+        np.testing.assert_allclose(n_so, [1.0, 0.0])
+        np.testing.assert_allclose(so_cores, [4.0, 0.0])
+        np.testing.assert_allclose(deaths, [2.0, 1.0])
+        np.testing.assert_array_equal(spont, [False, True])
+        assert ev_valid.sum() == 1
+        # censored scale-out VM accrues exposure to the horizon
+        np.testing.assert_allclose(np.asarray(trace.core_hours)[v][0],
+                                   2 * 2.0 + 4 * 5.0)
+
+    def test_rebucket_folds_near_arrivals_into_c0(self, tmp_path):
+        # 10-minute stagger: without re-bucketing it is a scale-out, with
+        # 1h re-bucketing it folds into the initial request
+        rows = [vm("vm-1", "dep-a", 0, None, 2),
+                vm("vm-2", "dep-a", 600, None, 4),
+                vm("vm-3", "dep-a", 7200, None, 1)]
+        p = write_csv(tmp_path / "rebucket.csv", rows)
+        fine, _ = ingest_cortez_csv(p, horizon_hours=4.0)
+        assert float(np.asarray(fine.c0)[0]) == 2.0
+        assert float(np.asarray(fine.n_scaleouts)[0]) == 2.0
+        coarse, _ = ingest_cortez_csv(p, rebucket_dt_hours=1.0,
+                                      horizon_hours=4.0)
+        assert float(np.asarray(coarse.c0)[0]) == 6.0
+        assert float(np.asarray(coarse.n_scaleouts)[0]) == 1.0
+
+    def test_event_buffer_overflow_counted_in_totals(self, tmp_path):
+        rows = [vm("vm-0", "dep-a", 0, None, 1)] + [
+            vm(f"vm-{i}", "dep-a", 3600 * i, None, 1) for i in range(1, 6)]
+        p = write_csv(tmp_path / "overflow.csv", rows)
+        trace, diag = ingest_cortez_csv(p, max_events=2, horizon_hours=6.0)
+        assert diag["n_events_beyond_buffer"] == 3
+        assert float(np.asarray(trace.n_scaleouts)[0]) == 5.0
+        assert int(np.asarray(trace.events.valid)[0].sum()) == 2
+
+    def test_max_deployments_cap_counted(self, tmp_path):
+        rows = [vm(f"vm-{i}", f"dep-{i}", 3600 * i, None, 1)
+                for i in range(5)]
+        p = write_csv(tmp_path / "cap.csv", rows)
+        trace, diag = ingest_cortez_csv(p, max_deployments=3,
+                                        horizon_hours=6.0)
+        assert n_deployments(trace) == 3
+        assert diag["n_deployments_dropped"] == 2

