@@ -6,11 +6,16 @@ compute; the presets scale the system down while preserving the phenomena
 comparable across policies within a preset; the paper-scale preset exists for
 the full reproduction on bigger hardware.
 
-Tuning follows the paper (§5.2 binary search subject to the SLA) as a
-two-stage vmapped parameter sweep: evaluate all candidate thresholds in
-parallel (PolicyParams is a traced pytree, so one compile serves every
-candidate), pick the largest parameter whose *aggregate* failure rate meets
-the scale-adjusted SLA, then refine once around it.
+Tuning (paper §5.2: search subject to the SLA) lives in ``repro.tuning``:
+``tune_and_eval`` here is a thin preset-aware wrapper around
+``tuning.calibrate`` (whole-theta-grid batched pass, CI-aware stage
+stopping) that adds the BCa utilization interval benchmarks report.
+
+Each preset's ``agg_refresh`` is only the *hand-picked fallback* for the
+aggregate-refresh interval: ``sim_config`` asks
+``tuning.pick_agg_refresh`` first, which selects K from the measured
+utilization/SLA-slack K-curve recorded in BENCH_<scale>.json (see
+``benchmarks/tuning_bench.py``).
 """
 from __future__ import annotations
 
@@ -18,12 +23,10 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import (AZURE_PRIORS, FIRST, SECOND, ZEROTH, geometric_grid,
-                        make_policy)
-from repro.sim import SimConfig, bca_ci, make_run, sla_failure_rate
+from repro.core import SECOND, AZURE_PRIORS, geometric_grid
+from repro.sim import SimConfig, bca_ci, make_run
+from repro.tuning import calibrate, pick_agg_refresh
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,7 +41,8 @@ class Scale:
     n_thresholds: int
     grid_points: int
     tau: float            # scale-adjusted SLA
-    agg_refresh: int = 1  # aggregate-curve refresh interval (steps)
+    agg_refresh: int = 1  # hand-picked refresh-interval fallback; the
+                          # measured K-curve wins when recorded (sim_config)
 
 
 SCALES = {
@@ -56,12 +60,20 @@ SCALES = {
 
 
 def sim_config(scale: Scale, **over) -> SimConfig:
+    """Preset -> SimConfig. ``agg_refresh_steps`` comes from the measured
+    K-curve when one is recorded for this scale (``tuning.pick_agg_refresh``
+    over the committed BENCH artifact); the preset's hand-picked value is
+    only the fallback — and the safety net when overrides change the horizon
+    so the recorded K no longer divides the step count."""
     base = dict(capacity=scale.capacity, arrival_rate=scale.arrival_rate,
                 horizon_hours=scale.horizon_hours, dt=scale.dt,
                 max_slots=scale.max_slots, max_arrivals=5,
-                priors=AZURE_PRIORS,
-                agg_refresh_steps=scale.agg_refresh)
+                priors=AZURE_PRIORS)
     base.update(over)
+    if "agg_refresh_steps" not in over:
+        probe = SimConfig(**base)
+        base["agg_refresh_steps"] = pick_agg_refresh(
+            scale.name, fallback=scale.agg_refresh, n_steps=probe.n_steps)
     return SimConfig(**base)
 
 
@@ -69,93 +81,33 @@ def grid_for(scale: Scale, cfg: SimConfig):
     return geometric_grid(cfg.dt, cfg.horizon_hours * 3.0, scale.grid_points)
 
 
-def _isotonic(y: np.ndarray) -> np.ndarray:
-    """Pool-adjacent-violators isotonic regression (nondecreasing fit)."""
-    y = np.asarray(y, dtype=np.float64).copy()
-    w = np.ones_like(y)
-    blocks = [[i] for i in range(len(y))]
-    vals = list(y)
-    ws = list(w)
-    i = 0
-    while i < len(vals) - 1:
-        if vals[i] > vals[i + 1] + 1e-18:
-            tot = ws[i] + ws[i + 1]
-            vals[i] = (vals[i] * ws[i] + vals[i + 1] * ws[i + 1]) / tot
-            ws[i] = tot
-            blocks[i].extend(blocks[i + 1])
-            del vals[i + 1], ws[i + 1], blocks[i + 1]
-            i = max(i - 1, 0)
-        else:
-            i += 1
-    out = np.empty_like(y)
-    for v, b in zip(vals, blocks):
-        out[b] = v
-    return out
-
-
-def _eval_param_batch(run_fn, kind, params_vec, keys, capacity, marginal):
-    """[T] params × [R] runs -> dict of [T, R] metrics arrays."""
-
-    def one_param(p):
-        pol = make_policy(int(kind), threshold=p, rho=p, capacity=capacity,
-                          marginal=marginal)
-        return jax.vmap(lambda k: run_fn(k, pol))(keys)
-
-    metrics = jax.vmap(one_param)(params_vec)
-    return metrics
-
-
 def tune_and_eval(scale: Scale, kind: int, cfg: SimConfig, *,
                   marginal: bool = False, seed: int = 0,
                   lo: float = None, hi: float = None) -> dict:
-    """Two-stage parallel sweep; returns tuned param + utilization CI."""
+    """Preset-aware ``tuning.calibrate`` + the BCa utilization interval.
+
+    One compile serves every candidate (PolicyParams is traced); the whole
+    theta grid runs as a single device-sharded batch, and refinement stops
+    once the SLA estimate's CI separates from the scale's tau. Raw
+    max-feasible selection on purpose — isotonic (PAV) smoothing of the
+    empirical failure curve pools single-run flukes into neighboring good
+    parameters at small run counts and is net harmful; the paper's
+    importance sampling at --scale full is the statistically sound path.
+    """
     grid = grid_for(scale, cfg)
     run_fn = make_run(cfg, grid, kind)
     keys = jax.random.split(jax.random.PRNGKey(seed), scale.n_runs)
-    c = cfg.capacity
-    if kind == SECOND:
-        lo = np.log10(2e-4) if lo is None else lo
-        hi = np.log10(0.9) if hi is None else hi
-        to_param = lambda x: 10.0 ** x
-    else:
-        lo = 0.2 * c if lo is None else lo
-        hi = (1.0 if kind == ZEROTH else 1.05) * c if hi is None else hi
-        to_param = lambda x: x
-
-    best = None
     t0 = time.time()
-    n_pts = scale.n_thresholds + (2 if kind == SECOND else 0)
-    for stage in range(2):
-        xs = np.linspace(lo, hi, n_pts)
-        params_vec = jnp.asarray([to_param(x) for x in xs], jnp.float32)
-        m = _eval_param_batch(run_fn, kind, params_vec, keys, c, marginal)
-        fails = np.asarray(m.failed_requests)     # [T, R]
-        reqs = np.asarray(m.total_requests)
-        utils = np.asarray(m.utilization)
-        agg_fail = fails.sum(1) / np.maximum(reqs.sum(1), 1.0)
-        # NOTE: we experimented with isotonic (PAV) smoothing of the
-        # empirical failure curve here; at 4 runs it pools single-run flukes
-        # into neighboring good parameters and is net harmful (see
-        # EXPERIMENTS.md §Paper). The raw max-feasible rule + the paper's
-        # importance sampling at --scale full is the statistically sound path.
-        feasible = agg_fail <= scale.tau
-        if feasible.any():
-            idx = int(np.max(np.nonzero(feasible)[0]))
-        else:
-            idx = 0
-        best = {
-            "param": float(to_param(xs[idx])),
-            "util": utils[idx],
-            "agg_fail": float(agg_fail[idx]),
-        }
-        # refine around the chosen index
-        span = (hi - lo) / (scale.n_thresholds - 1)
-        lo, hi = xs[idx] - span, xs[idx] + span
-    ci = bca_ci(best["util"], n_resamples=2_000)
+    res = calibrate(
+        run_fn, kind, keys, capacity=cfg.capacity, tau=scale.tau,
+        lo=lo, hi=hi,
+        n_grid=scale.n_thresholds + (2 if kind == SECOND else 0),
+        max_stages=2, marginal=marginal)
+    ci = bca_ci(res.util_runs, n_resamples=2_000)
     return {
-        "kind": kind, "param": best["param"],
+        "kind": kind, "param": res.theta,
         "utilization": ci.estimate, "ci_lo": ci.lo, "ci_hi": ci.hi,
-        "sla_fail": best["agg_fail"], "tau": scale.tau,
+        "sla_fail": res.sla_fail, "tau": scale.tau,
         "seconds": round(time.time() - t0, 1),
     }
 

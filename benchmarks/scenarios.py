@@ -1,23 +1,30 @@
-"""Scenario × policy robustness sweep over synthetic traces (Table-2-style).
+"""Scenario × policy sweep over synthetic traces: robustness *and* the cost
+of honoring the SLA.
 
-Policies are fixed at stationary-regime parameters — by default the paper's
-full-scale Table-2 tuned values expressed as capacity fractions (re-tuning
-per scale via ``tune=True`` reuses ``tune_and_eval`` but costs three full
-threshold sweeps) — then every registered trace scenario (diurnal
-modulation, flash crowds, heavy-tail lifetime inflation, correlated
-batches) is replayed through the *same* policies via the trace arrival
-source: the utilization/SLA deltas per scenario measure how robust each
-admission policy is to non-stationary arrivals it was never tuned for.
-Also reports the generate→fit prior round-trip error, an
-information-model comparison (the same baseline trace ensemble replayed
-under GLOBAL / §6 PSEUDO / §7 labeled beliefs via the trace-level
-stratified importance plan), and the key-level importance-sampling plan
-routed through the sharded ``run_keyed_batch``.
+For every registered trace scenario (diurnal modulation, flash crowds,
+heavy-tail lifetime inflation, correlated batches) and every policy kind,
+two operating points run on the **same** replay streams and run keys:
 
-Cost: the sweep simulates scenarios x policies x n_runs full replays (like
-``table2``, minutes at the quick scale, ~13 min recorded in
-BENCH_quick.json) — use ``--only`` to skip it when iterating on the cheap
-kernel benchmarks.
+  * *stationary-tuned* — parameters fixed at the stationary regime's values
+    (by default the paper's full-scale Table-2 tuned values as capacity
+    fractions; ``tune=True`` re-tunes them per scale): how robust is a
+    policy to non-stationary arrivals it was never tuned for?
+  * *re-tuned* — ``repro.tuning.calibrate_scenario`` re-calibrates the
+    parameter against the scenario's own arrivals at the matched
+    scale-adjusted SLA: what utilization is actually available there, and
+    what does closing the robustness gap cost?
+
+Both land in one row per (scenario, kind): ``util_stat``/``sla_stat`` vs
+``util_ret``/``sla_ret`` plus the re-tuned theta. Also reports the
+generate→fit prior round-trip error, an information-model comparison (the
+same baseline trace ensemble replayed under GLOBAL / §6 PSEUDO / §7 labeled
+beliefs via the trace-level stratified importance plan), and the key-level
+importance-sampling plan routed through the sharded ``run_keyed_batch``.
+
+Cost: the re-tuned point multiplies the replay count by the theta grid
+(scenarios x policies x (1 + n_thresholds * stages) x n_runs full replays)
+— tens of minutes at the quick scale; use ``--only`` to skip it when
+iterating on the cheap kernel benchmarks.
 """
 from __future__ import annotations
 
@@ -30,10 +37,11 @@ from repro.core import AZURE_PRIORS, FIRST, SECOND, ZEROTH, make_policy
 from repro.sim import (GLOBAL, MIX_LABELED, PSEUDO, estimate_from_plan,
                        make_importance_plan, make_run,
                        make_trace_ensemble_plan, simulate_plan,
-                       simulate_trace_plan, sla_failure_rate)
+                       simulate_trace_plan)
 from repro.traces import (TraceSpec, fit_priors, prior_relative_errors,
                           scenario_names, synthesize_scenario,
                           trace_to_stream)
+from repro.tuning import calibrate_scenario, replay_stream_batch
 
 from .common import SCALES, csv_row, grid_for, sim_config, tune_and_eval
 
@@ -94,45 +102,42 @@ def run(scale_name: str = "tiny", seed: int = 0, tune: bool = False) -> list:
                  FIRST: PAPER_RATIO_PARAMS[FIRST] * cfg.capacity,
                  SECOND: PAPER_RATIO_PARAMS[SECOND]}
 
-    # -- replay every scenario through the tuned policies --------------------
+    # -- replay every scenario: stationary-tuned vs re-tuned at matched SLA --
     replay_cfg = cfg._replace(max_arrivals=REPLAY_MAX_ARRIVALS)
     runs = {kind: make_run(replay_cfg, grid, kind)
             for kind in (ZEROTH, FIRST, SECOND)}
     base_util = {}
     for si, scen in enumerate(scenario_names()):
-        t_keys = jax.random.split(jax.random.fold_in(key, 100 + si),
-                                  scale.n_runs)
-        # run keys must come from a distinct root: reusing t_keys would make
-        # the scan key equal to the trace-synthesis key (split shares its
-        # prefix), correlating within-run events with the replayed arrivals
-        run_keys = jax.random.split(jax.random.fold_in(key, 500 + si),
-                                    scale.n_runs)
-        streams, dropped = [], 0
-        for tk in t_keys:
-            s, n_drop = trace_to_stream(
-                synthesize_scenario(tk, scen, spec), replay_cfg)
-            streams.append(s)
-            dropped += int(n_drop)
-        stream_batch = jax.tree.map(lambda *xs: np.stack(xs), *streams)
+        # trace keys and run keys from distinct roots: a shared root would
+        # make the scan key equal to the trace-synthesis key (split shares
+        # its prefix), correlating within-run events with replayed arrivals
+        streams, run_keys, dropped = replay_stream_batch(
+            jax.random.fold_in(key, 100 + si),
+            jax.random.fold_in(key, 500 + si),
+            scen, spec, replay_cfg, scale.n_runs)
         for kind in (ZEROTH, FIRST, SECOND):
             t0 = time.time()
-            pol = make_policy(kind, threshold=tuned[kind], rho=tuned[kind],
-                              capacity=replay_cfg.capacity)
-            m = jax.vmap(runs[kind], in_axes=(0, None, 0))(
-                run_keys, pol, stream_batch)
-            util = float(np.mean(np.asarray(m.utilization)))
-            sla = sla_failure_rate(np.asarray(m.failed_requests),
-                                   np.asarray(m.total_requests))
+            cal = calibrate_scenario(
+                runs[kind], kind, scen, streams, run_keys,
+                capacity=replay_cfg.capacity, tau=scale.tau,
+                stationary_theta=tuned[kind],
+                n_grid=scale.n_thresholds, max_stages=1)
             if scen == "baseline":
-                base_util[kind] = util
+                base_util[kind] = cal.stationary_util
                 rel = ""
             else:
-                rel = (f" vs_baseline={util / base_util[kind] - 1.0:+.1%}"
+                rel = (" vs_baseline="
+                       f"{cal.stationary_util / base_util[kind] - 1.0:+.1%}"
                        if base_util.get(kind) else "")
             rows.append(csv_row(
                 f"scenarios/{scen}/{NAMES[kind]}",
                 (time.time() - t0) * 1e6,
-                f"util={util:.4f} sla={sla:.2e} dropped={dropped}{rel}"))
+                f"util_stat={cal.stationary_util:.4f}"
+                f" sla_stat={cal.stationary_sla:.2e}"
+                f" util_ret={cal.retuned.utilization:.4f}"
+                f" sla_ret={cal.retuned.sla_fail:.2e}"
+                f" theta_ret={cal.retuned.theta:.4g}"
+                f" dropped={dropped}{rel}"))
 
     # -- information-model replay: GLOBAL vs PSEUDO vs labeled ---------------
     # The paper's headline (§6-§7): richer provider information about the

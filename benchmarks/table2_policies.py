@@ -1,6 +1,8 @@
 """Paper Table 2: zeroth vs first vs second moment policy utilization
-(thresholds tuned to the SLA, 95% BCa CIs). Paper values at full scale:
-50.45% / 66.19% / 67.32% (+31.2% / +33.4% relative)."""
+(thresholds tuned to the SLA via ``repro.tuning.calibrate`` — one batched
+device-sharded theta-grid pass per stage, CI-aware stopping — through the
+``common.tune_and_eval`` preset wrapper; 95% BCa CIs). Paper values at full
+scale: 50.45% / 66.19% / 67.32% (+31.2% / +33.4% relative)."""
 from __future__ import annotations
 
 import time

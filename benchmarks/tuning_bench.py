@@ -1,0 +1,104 @@
+"""Calibration subsystem rows: batched SLA tuning + the agg_refresh K-curve.
+
+Two row families, both consumed programmatically (not just read by humans):
+
+  * ``tuning/calibrate/<kind>`` — ``repro.tuning.calibrate`` on the preset's
+    prior-sampled arrivals for every policy kind: tuned theta, utilization,
+    measured SLA with its cluster-robust CI, and how many stages/simulations
+    the CI-aware stopping actually spent.
+  * ``tuning/kcurve/<scale>/K=<k>`` — utilization and SLA-slack vs the
+    aggregate-refresh interval K, at the K=min reference theta (fixed) and
+    re-tuned per K. These rows ARE the persistence format for
+    ``tuning.pick_agg_refresh``: once recorded in BENCH_<scale>.json (or
+    BENCH_quick.json), ``benchmarks/common.sim_config`` selects the
+    preset's ``agg_refresh_steps`` from them instead of the hand-picked
+    value. ``tuning/pick_agg_refresh/<scale>`` reports the selection made
+    from the freshly measured curve.
+
+Under ``REPRO_SMOKE=1`` (the CI docs job) everything shrinks to a
+seconds-scale synthetic preset named ``smoke`` — the row *machinery*
+(sweep, serialization, selection round-trip) is exercised on every PR
+without the quick preset's minutes; smoke rows are written to a throwaway
+JSON and never consulted by ``pick_agg_refresh`` for real scales.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+from repro.core import FIRST, SECOND, ZEROTH
+from repro.sim import make_run
+from repro.tuning import (calibrate, format_kcurve_derived, kcurve_divisors,
+                          kcurve_row_name, parse_kcurve_rows, pick_from_curve,
+                          sweep_kcurve)
+
+from .common import SCALES, Scale, csv_row, grid_for, sim_config
+
+NAMES = {ZEROTH: "zeroth", FIRST: "first", SECOND: "second"}
+
+#: K-curve cost scales with (1 + n_grid * stages) * n_runs sims per K; the
+#: second-moment policy is the paper's headline, so the curve is measured on
+#: it (threshold-policy curves respond to K the same way through tuning).
+KCURVE_KIND = SECOND
+
+SMOKE_SCALE = Scale("smoke", 800.0, 0.05, 60 * 24.0, 24.0, 128, 2, 3,
+                    16, 5e-3, agg_refresh=1)
+
+
+def _scale_for(scale_name: str) -> Scale:
+    if os.environ.get("REPRO_SMOKE") == "1":
+        return SMOKE_SCALE
+    return SCALES[scale_name]
+
+
+def run(scale_name: str = "tiny", seed: int = 0) -> list:
+    scale = _scale_for(scale_name)
+    smoke = scale.name == "smoke"
+    cfg = sim_config(scale)
+    grid = grid_for(scale, cfg)
+    keys = jax.random.split(jax.random.PRNGKey(seed), scale.n_runs)
+    rows = []
+
+    # -- calibrate every policy kind on the preset ---------------------------
+    for kind in (ZEROTH, FIRST, SECOND):
+        t0 = time.time()
+        res = calibrate(make_run(cfg, grid, kind), kind, keys,
+                        capacity=cfg.capacity, tau=scale.tau,
+                        n_grid=scale.n_thresholds + (2 if kind == SECOND
+                                                     else 0),
+                        max_stages=2)
+        rows.append(csv_row(
+            f"tuning/calibrate/{NAMES[kind]}", (time.time() - t0) * 1e6,
+            f"theta={res.theta:.6g} util={res.utilization:.4f}"
+            f" sla={res.sla_fail:.2e}(ci {res.sla_lo:.1e}:{res.sla_hi:.1e})"
+            f"<=tau={res.tau:.0e} stages={len(res.stages)}"
+            f" sims={res.n_sims} separated={int(res.separated)}"))
+
+    # -- the agg_refresh K-curve --------------------------------------------
+    # each K re-jits the blocked scan, so smoke keeps the candidate set tiny
+    ks = kcurve_divisors(cfg.n_steps, k_max=4 if smoke else 16)
+    t0 = time.time()
+    points = sweep_kcurve(cfg, grid, KCURVE_KIND, keys, tau=scale.tau, ks=ks,
+                          n_grid=scale.n_thresholds, max_stages=1)
+    us_total = (time.time() - t0) * 1e6
+    for p in points:
+        rows.append(csv_row(kcurve_row_name(scale.name, p.k),
+                            us_total / max(len(points), 1),
+                            format_kcurve_derived(p)))
+    # selection round-trip through the row serialization — exactly what
+    # pick_agg_refresh will read back from the committed artifact
+    parsed = parse_kcurve_rows(
+        [{"name": r.split(",", 2)[0], "derived": r.split(",", 2)[2]}
+         for r in rows], scale.name)
+    chosen = pick_from_curve(parsed)
+    rows.append(csv_row(
+        f"tuning/pick_agg_refresh/{scale.name}", 0.0,
+        f"K={chosen} candidates={ks} hand_picked={scale.agg_refresh}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,77 @@
+"""Calibration in 60 seconds: tune a policy to the SLA, re-tune per scenario.
+
+Three short acts (see docs/tuning.md for the full guide):
+
+  1. calibrate the second-moment policy's Cantelli rho to an SLA target
+     with ``repro.tuning.calibrate`` — the whole candidate grid in one
+     batched pass, CI-aware stopping;
+  2. re-tune the same policy against a flash-crowd scenario's own replayed
+     arrivals and print the robustness gap (stationary-tuned vs re-tuned
+     utilization at matched SLA);
+  3. read the agg_refresh K-curve selection the benchmarks consume
+     (``pick_agg_refresh`` over the committed BENCH artifact).
+
+  PYTHONPATH=src python examples/calibrate_policy.py
+
+Set REPRO_SMOKE=1 (the CI docs job does) to shrink everything so the
+script finishes in seconds.
+"""
+import os
+
+import jax
+
+from repro.core import SECOND, geometric_grid
+from repro.sim import make_config, make_run
+from repro.traces import TraceSpec
+from repro.tuning import (calibrate, calibrate_scenario, pick_agg_refresh,
+                          replay_stream_batch)
+
+SMOKE = os.environ.get("REPRO_SMOKE") == "1"
+
+
+def main():
+    days, n_runs, n_grid = (30, 2, 4) if SMOKE else (120, 4, 6)
+    tau = 5e-3
+    cfg = make_config(capacity=500.0, arrival_rate=0.08,
+                      horizon_hours=days * 24.0, dt=24.0, max_slots=128,
+                      max_arrivals=4, d_points=8)
+    grid = geometric_grid(cfg.dt, cfg.horizon_hours * 3, 12)
+    run_fn = make_run(cfg, grid, SECOND)
+    keys = jax.random.split(jax.random.PRNGKey(0), n_runs)
+
+    # 1. calibrate to the SLA: one batched pass per stage, stop on CI
+    res = calibrate(run_fn, SECOND, keys, capacity=cfg.capacity, tau=tau,
+                    n_grid=n_grid, max_stages=2)
+    print(f"calibrated rho={res.theta:.4g} util={res.utilization:.3f} "
+          f"sla={res.sla_fail:.1e} (ci {res.sla_lo:.1e}..{res.sla_hi:.1e}) "
+          f"<= tau={tau:.0e} [{len(res.stages)} stage(s), {res.n_sims} sims]")
+
+    # 2. the same policy under a flash crowd: robustness vs re-tuned
+    replay_cfg = cfg._replace(max_arrivals=8)
+    spec = TraceSpec(horizon_hours=cfg.horizon_hours,
+                     arrival_rate=cfg.arrival_rate,
+                     max_deployments=256, max_events=8)
+    streams, run_keys, _ = replay_stream_batch(
+        jax.random.PRNGKey(1), jax.random.PRNGKey(2), "flash_crowd",
+        spec, replay_cfg, n_runs)
+    cal = calibrate_scenario(
+        make_run(replay_cfg, grid, SECOND), SECOND, "flash_crowd",
+        streams, run_keys, capacity=cfg.capacity, tau=tau,
+        stationary_theta=res.theta, n_grid=n_grid, max_stages=1)
+    print(f"flash_crowd: stationary-tuned util={cal.stationary_util:.3f} "
+          f"(sla={cal.stationary_sla:.1e}) -> re-tuned "
+          f"util={cal.retuned.utilization:.3f} "
+          f"(rho={cal.retuned.theta:.4g}, sla={cal.retuned.sla_fail:.1e}); "
+          f"gap={cal.util_gap:+.3f}")
+
+    # 3. per-scale agg_refresh from the measured K-curve (hand-picked value
+    # is only the fallback when no curve is recorded for the scale)
+    for scale, hand in (("tiny", 4), ("quick", 8), ("full", 12)):
+        recorded = pick_agg_refresh(scale, fallback=-1) != -1
+        k = pick_agg_refresh(scale, fallback=hand)
+        src = "measured K-curve" if recorded else "hand-picked fallback"
+        print(f"agg_refresh[{scale}] = {k}  ({src})")
+
+
+if __name__ == "__main__":
+    main()

@@ -151,7 +151,13 @@ def tune_threshold(
 ) -> float:
     """Binary-search the policy parameter so the measured SLA failure rate is
     just below ``target_sla``. ``run_sla(theta)`` returns the failure rate of a
-    simulation batch at parameter theta (monotone increasing in theta)."""
+    simulation batch at parameter theta (monotone increasing in theta).
+
+    This is the paper-literal *serial reference oracle*: one full simulation
+    batch per probe, kept deliberately simple so tests can compare against
+    it. Production calibration lives in ``repro.tuning.calibrate``, which
+    evaluates whole candidate grids in one device-sharded batched pass with
+    CI-aware stopping (and is oracle-tested against this function)."""
     for _ in range(iters):
         mid = 0.5 * (lo + hi)
         if run_sla(mid) <= target_sla:

@@ -1,0 +1,33 @@
+"""Calibration subsystem: batched SLA tuning, per-scenario re-tuning, and
+the ``agg_refresh`` K-curve (paper §5.2, as first-class testable code).
+
+  * ``calibrate``  — whole-theta-grid SLA-constrained search in one
+    device-sharded batched pass, CI-aware stage stopping, every policy kind
+    in ``core.policies``; the serial ``core.policies.tune_threshold``
+    bisection stays as the reference oracle the tests compare against.
+  * ``scenarios``  — re-tune a policy against a trace scenario's own replay
+    streams and report stationary-tuned vs re-tuned operating points at
+    matched SLA (the robustness gap, measured).
+  * ``kcurve``     — utilization and SLA-slack vs ``agg_refresh_steps``,
+    recorded into BENCH artifacts; ``pick_agg_refresh`` selects the
+    per-scale refresh interval from the measured curve instead of by hand.
+"""
+from .calibrate import (SPACE_LINEAR, SPACE_LOG10, CalibrationResult,
+                        ProbeStage, calibrate, eval_theta_grid, from_param,
+                        sla_ci, theta_space, to_param)
+from .scenarios import (ScenarioCalibration, calibrate_scenario,
+                        replay_stream_batch)
+from .kcurve import (DEFAULT_UTIL_TOL, KPoint, format_kcurve_derived,
+                     kcurve_divisors, kcurve_row_name, load_kcurve,
+                     parse_kcurve_rows, pick_agg_refresh, pick_from_curve,
+                     sweep_kcurve)
+
+__all__ = [
+    "SPACE_LINEAR", "SPACE_LOG10", "CalibrationResult", "ProbeStage",
+    "calibrate", "eval_theta_grid", "from_param", "sla_ci", "theta_space",
+    "to_param",
+    "ScenarioCalibration", "calibrate_scenario", "replay_stream_batch",
+    "DEFAULT_UTIL_TOL", "KPoint", "format_kcurve_derived", "kcurve_divisors",
+    "kcurve_row_name", "load_kcurve", "parse_kcurve_rows", "pick_agg_refresh",
+    "pick_from_curve", "sweep_kcurve",
+]

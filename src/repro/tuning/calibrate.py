@@ -1,0 +1,301 @@
+"""Batched SLA-constrained policy calibration (paper §5.2, as a subsystem).
+
+The paper tunes every admission policy's free parameter by binary search
+subject to the SLA and re-tunes whenever the environment changes. The serial
+reference (``core.policies.tune_threshold``) pays one full simulation batch
+per probe; here the whole candidate grid is evaluated in **one** pass:
+
+  * the theta grid [T] and the run-key batch [R] are flattened into a single
+    [T*R] batch of (key, theta[, stream]) triples and pushed through the same
+    device-sharded vmap machinery as ``sim.run_keyed_batch`` (policy
+    parameters are traced, so one compile serves every candidate);
+  * run keys are **shared across thetas** (common random numbers), so the
+    empirical SLA curve is monotone-by-construction up to trajectory
+    divergence and candidate grids are comparable point by point;
+  * selection is by **value**, not grid position: the largest feasible theta
+    wins, so the result is invariant to grid permutation and to how the
+    batch was sharded across devices (property-tested);
+  * refinement stages tighten the grid around the winner only while the SLA
+    estimate's confidence interval still straddles the target — once the
+    measured failure rate separates from tau, more grid resolution is
+    statistical noise (CI-aware stopping).
+
+Replay calibration: pass ``streams`` (a stacked [R] ``ArrivalStream`` batch,
+one per run key) and every theta is evaluated against those exact arrivals —
+this is what per-scenario re-tuning (``tuning.scenarios``) builds on.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.policies import SECOND, make_policy
+from ..sim.simulator import ArrivalStream, shard_batch_over_devices
+
+#: search-space coordinates per policy kind: SECOND tunes the Cantelli rho on
+#: a log10 grid (the feasible range spans ~4 decades); the threshold kinds
+#: tune cores linearly as fractions of capacity.
+SPACE_LINEAR, SPACE_LOG10 = "linear", "log10"
+
+
+def theta_space(kind: int, capacity: float,
+                lo: Optional[float] = None,
+                hi: Optional[float] = None) -> tuple[float, float, str]:
+    """Default (lo, hi, space) search bounds for a policy kind.
+
+    Bounds are expressed in *search* coordinates: raw cores for the
+    threshold policies, log10(rho) for the second-moment policy. Explicit
+    ``lo``/``hi`` override the defaults (still in search coordinates).
+    """
+    if kind == SECOND:
+        return (np.log10(2e-4) if lo is None else lo,
+                np.log10(0.9) if hi is None else hi, SPACE_LOG10)
+    from ..core.policies import ZEROTH
+
+    return (0.2 * capacity if lo is None else lo,
+            (1.0 if kind == ZEROTH else 1.05) * capacity if hi is None else hi,
+            SPACE_LINEAR)
+
+
+def to_param(x, space: str):
+    """Search coordinate -> policy parameter."""
+    return 10.0 ** x if space == SPACE_LOG10 else x
+
+
+def from_param(p, space: str):
+    """Policy parameter -> search coordinate."""
+    return np.log10(p) if space == SPACE_LOG10 else p
+
+
+def sla_ci(fails: np.ndarray, reqs: np.ndarray,
+           z: float = 1.96) -> tuple[float, float, float]:
+    """Cluster-robust normal CI for the aggregate SLA failure rate.
+
+    Failures are concentrated in tail runs, so a per-request binomial CI
+    would be wildly anti-conservative; treat each *run* as the sampling unit
+    (ratio estimator over run totals, variance from run-level residuals).
+    Returns ``(rate, lo, hi)``; a batch with zero observed failures has a
+    degenerate [0, 0] interval — separated below any positive target.
+    """
+    f = np.asarray(fails, dtype=np.float64)
+    r = np.asarray(reqs, dtype=np.float64)
+    n = len(f)
+    tot_r = max(r.sum(), 1.0)
+    rate = f.sum() / tot_r
+    if n < 2:
+        return float(rate), float(rate), float(rate)
+    resid = f - rate * r
+    var = np.sum(resid**2) * n / (n - 1)
+    se = np.sqrt(var) / tot_r
+    return float(rate), float(max(rate - z * se, 0.0)), float(rate + z * se)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeStage:
+    """One evaluated candidate grid: thetas (parameter space) with the
+    aggregate failure rate and per-run utilizations measured at each."""
+
+    thetas: np.ndarray      # [T] parameter-space candidates
+    agg_fail: np.ndarray    # [T] aggregate failure rate over the run batch
+    util: np.ndarray        # [T, R] per-run utilizations
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationResult:
+    """Output of ``calibrate``: the tuned parameter plus the evidence."""
+
+    kind: int
+    theta: float            # tuned parameter (largest SLA-feasible candidate)
+    feasible: bool          # did any candidate meet the SLA?
+    tau: float              # the SLA target calibrated against
+    sla_fail: float         # measured aggregate failure rate at theta
+    sla_lo: float           # cluster-robust CI on sla_fail
+    sla_hi: float
+    separated: bool         # CI no longer straddles tau (stopping condition)
+    utilization: float      # mean utilization at theta
+    util_runs: np.ndarray   # [R] per-run utilizations at theta (for BCa CIs)
+    grid_step: float        # final-stage grid spacing, search coordinates
+    space: str              # SPACE_LINEAR | SPACE_LOG10
+    stages: tuple           # tuple[ProbeStage] — every grid evaluated
+    n_sims: int             # total full simulations spent
+
+
+# calibrate builds one flat batched evaluator per (run_fn, kind, ...); cache
+# the jitted/sharded wrappers so repeated calibrations (scenario sweeps, the
+# K-curve) re-trace neither the vmap nor the shard_map. Mirrors
+# simulator._SHARDED_RUN_CACHE.
+_EVAL_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_EVAL_CACHE_MAX = 16
+
+
+def _theta_batch_fn(run_fn, kind: int, capacity: float, marginal: bool,
+                    has_streams: bool, devices, n_flat: int):
+    """Flat [T*R] (key, theta[, stream]) evaluator, device-sharded when the
+    flat batch divides the device count."""
+    cache_key = (run_fn, kind, float(capacity), marginal, has_streams,
+                 devices, n_flat % max(len(devices), 1) == 0)
+    fn = _EVAL_CACHE.get(cache_key)
+    if fn is not None:
+        _EVAL_CACHE.move_to_end(cache_key)
+        return fn
+
+    if has_streams:
+        def one(key, theta, stream):
+            pol = make_policy(kind, threshold=theta, rho=theta,
+                              capacity=capacity, marginal=marginal)
+            return run_fn(key, pol, stream)
+
+        batched = jax.vmap(one, in_axes=(0, 0, 0))
+        n_batch = 3
+    else:
+        def one(key, theta):
+            pol = make_policy(kind, threshold=theta, rho=theta,
+                              capacity=capacity, marginal=marginal)
+            return run_fn(key, pol)
+
+        batched = jax.vmap(one, in_axes=(0, 0))
+        n_batch = 2
+
+    n_dev = len(devices)
+    if n_dev > 1 and n_flat % n_dev == 0:
+        fn = shard_batch_over_devices(batched, devices, "cal",
+                                      n_batch_args=n_batch)
+    else:
+        fn = jax.jit(batched)
+    _EVAL_CACHE[cache_key] = fn
+    while len(_EVAL_CACHE) > _EVAL_CACHE_MAX:
+        _EVAL_CACHE.popitem(last=False)
+    return fn
+
+
+def eval_theta_grid(run_fn, kind: int, thetas, keys, *, capacity: float,
+                    marginal: bool = False,
+                    streams: Optional[ArrivalStream] = None,
+                    devices=None):
+    """Evaluate a whole [T] parameter grid over a shared [R] key batch in one
+    device-sharded pass; returns ``RunMetrics`` with leading shape [T, R].
+
+    Keys (and replay streams, when given) are shared across thetas — common
+    random numbers — so grid points differ only through the policy.
+    """
+    thetas = jnp.asarray(thetas, jnp.float32)
+    keys = jnp.asarray(keys)
+    t_n, r_n = thetas.shape[0], keys.shape[0]
+    n_flat = t_n * r_n
+    devices = tuple(jax.devices() if devices is None else devices)
+
+    thetas_flat = jnp.repeat(thetas, r_n)
+    keys_flat = jnp.tile(keys, (t_n, 1))
+    args = (keys_flat, thetas_flat)
+    if streams is not None:
+        tile = lambda x: jnp.tile(x, (t_n,) + (1,) * (x.ndim - 1))
+        args = args + (jax.tree.map(tile, streams),)
+    fn = _theta_batch_fn(run_fn, kind, capacity, marginal, streams is not None,
+                         devices, n_flat)
+    metrics = fn(*args)
+    return jax.tree.map(lambda x: x.reshape((t_n, r_n) + x.shape[1:]), metrics)
+
+
+def calibrate(
+    run_fn,
+    kind: int,
+    keys,
+    *,
+    capacity: float,
+    tau: float,
+    lo: Optional[float] = None,
+    hi: Optional[float] = None,
+    n_grid: int = 8,
+    thetas: Optional[Sequence[float]] = None,
+    max_stages: int = 3,
+    marginal: bool = False,
+    streams: Optional[ArrivalStream] = None,
+    devices=None,
+    z: float = 1.96,
+) -> CalibrationResult:
+    """SLA-constrained calibration of one policy's free parameter.
+
+    Evaluates candidate grids of ``n_grid`` thetas (each grid in a single
+    batched, device-sharded pass over the shared ``keys``), picks the largest
+    candidate whose aggregate failure rate meets ``tau``, and tightens the
+    grid around the winner for up to ``max_stages`` stages — stopping early
+    once the winner's SLA confidence interval separates from ``tau``
+    (see ``sla_ci``; further grid resolution below the estimator's noise
+    floor is meaningless).
+
+    ``thetas`` (parameter space) overrides the generated grid and implies a
+    single stage — the oracle/property tests use this for determinism.
+    ``streams`` calibrates against a fixed stacked [R] replay-stream batch
+    instead of prior-sampled arrivals (per-scenario re-tuning).
+
+    The result is invariant to permutation of the candidate grid and to the
+    device sharding of the flat batch: selection is by candidate *value* and
+    every candidate sees the identical key batch.
+    """
+    keys = jnp.asarray(keys)
+    x_lo, x_hi, space = theta_space(kind, capacity, lo, hi)
+    x0_lo, x0_hi = x_lo, x_hi
+    explicit = thetas is not None
+    if explicit:
+        max_stages = 1
+
+    stages = []
+    n_sims = 0
+    best = None
+    for _stage in range(max_stages):
+        if explicit:
+            theta_vec = np.asarray(thetas, dtype=np.float64)
+            xs = from_param(theta_vec, space)
+        else:
+            xs = np.linspace(x_lo, x_hi, n_grid)
+            theta_vec = np.asarray([to_param(x, space) for x in xs])
+        m = eval_theta_grid(run_fn, kind, theta_vec, keys, capacity=capacity,
+                            marginal=marginal, streams=streams,
+                            devices=devices)
+        fails = np.asarray(m.failed_requests)   # [T, R]
+        reqs = np.asarray(m.total_requests)
+        utils = np.asarray(m.utilization)
+        n_sims += fails.size
+        agg_fail = fails.sum(1) / np.maximum(reqs.sum(1), 1.0)
+        stages.append(ProbeStage(thetas=theta_vec, agg_fail=agg_fail,
+                                 util=utils))
+
+        feasible = agg_fail <= tau
+        if feasible.any():
+            # by value, not index: permutation/sharding invariance
+            idx = int(np.argmax(np.where(feasible, theta_vec, -np.inf)))
+            any_feasible = True
+        else:
+            idx = int(np.argmin(theta_vec))
+            any_feasible = False
+        rate, ci_lo, ci_hi = sla_ci(fails[idx], reqs[idx], z=z)
+        span = ((np.max(xs) - np.min(xs)) / max(len(xs) - 1, 1)
+                if len(xs) > 1 else 0.0)
+        best = {
+            "theta": float(theta_vec[idx]), "feasible": any_feasible,
+            "sla_fail": rate, "sla_lo": ci_lo, "sla_hi": ci_hi,
+            "util_runs": utils[idx], "grid_step": float(span),
+        }
+        separated = not (ci_lo <= tau <= ci_hi)
+        if separated or span == 0.0:
+            break
+        # tighten around the winner (search coordinates), clipped to the
+        # original bounds so refinement never escapes the search space
+        x_star = from_param(best["theta"], space)
+        x_lo = max(x_star - span, x0_lo)
+        x_hi = min(x_star + span, x0_hi)
+
+    return CalibrationResult(
+        kind=kind, theta=best["theta"], feasible=best["feasible"], tau=tau,
+        sla_fail=best["sla_fail"], sla_lo=best["sla_lo"],
+        sla_hi=best["sla_hi"], separated=separated,
+        utilization=float(np.mean(best["util_runs"])),
+        util_runs=np.asarray(best["util_runs"]),
+        grid_step=best["grid_step"], space=space, stages=tuple(stages),
+        n_sims=n_sims,
+    )

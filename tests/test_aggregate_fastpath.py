@@ -170,6 +170,84 @@ class TestFastSamplers:
             assert d.mean() == pytest.approx(lam, abs=6 * se), f"lam={lam}"
 
 
+class TestPtrsCompactCrossover:
+    """Regression: exactness at the ``_PTRS_COMPACT_MIN`` crossover itself.
+
+    The existing distribution tests exercise the compact path far from the
+    guard (2048 lanes); these pin the boundary: which branch runs on each
+    side of the guard, and exact behavior when the heavy-lane count sits
+    exactly at / one past the compact buffer."""
+
+    def test_guard_selects_branch_on_each_side(self, monkeypatch):
+        """lam.size == _PTRS_COMPACT_MIN routes through the compact path;
+        one lane fewer stays on the dense loop."""
+        from repro.core import processes
+
+        calls = []
+        real = processes._poisson_ptrs_compact
+        monkeypatch.setattr(
+            processes, "_poisson_ptrs_compact",
+            lambda key, lam, act: calls.append(lam.size) or real(key, lam,
+                                                                 act))
+        n_min = processes._PTRS_COMPACT_MIN
+        key = jax.random.PRNGKey(0)
+        below = processes.fast_poisson(key, jnp.full((n_min - 1,), 50.0))
+        assert calls == []
+        above = processes.fast_poisson(key, jnp.full((n_min,), 50.0))
+        assert calls == [n_min]
+        assert below.shape == (n_min - 1,) and above.shape == (n_min,)
+
+    def test_boundary_sizes_match_poisson_moments(self):
+        """Both sides of the guard draw from the same distribution: the
+        heavy-lane mean/variance are exact at sizes min-1 and min."""
+        from repro.core.processes import _PTRS_COMPACT_MIN
+
+        lam_val = 60.0
+        keys = jax.random.split(jax.random.PRNGKey(21), 80)
+        for n in (_PTRS_COMPACT_MIN - 1, _PTRS_COMPACT_MIN):
+            # a realistic mix: mostly small lanes, a sprinkle of heavy ones
+            lam = jnp.full((n,), 0.4).at[::37].set(lam_val)
+            d = np.asarray(jax.jit(jax.vmap(
+                lambda k: fast_poisson(k, lam)))(keys))
+            heavy = d[:, ::37].ravel()
+            se = np.sqrt(lam_val / heavy.size)
+            assert heavy.mean() == pytest.approx(lam_val, abs=6 * se), n
+            assert heavy.var() == pytest.approx(lam_val, rel=0.15), n
+
+    def test_buffer_exactly_full_and_one_over(self):
+        """Heavy-lane count == compact buffer (every rank fits, none spare)
+        and == buffer + 1 (exactly one overflow lane): all heavy lanes get
+        real draws, inactive lanes stay zero, and the overflow lane — the
+        lane with the highest rank, parked at the array's end — is exact."""
+        from repro.core.processes import (_PTRS_BUF_DIV, _PTRS_COMPACT_MIN,
+                                          _poisson_ptrs_compact)
+
+        n = _PTRS_COMPACT_MIN
+        buf = n // _PTRS_BUF_DIV
+        lam_val = 35.0
+        keys = jax.random.split(jax.random.PRNGKey(5), 100)
+        for n_heavy in (buf, buf + 1):
+            # heavy lanes spread over the array, the last one at index n-1
+            idx = np.linspace(0, n - 1, n_heavy).round().astype(int)
+            lam = jnp.zeros(n).at[idx].set(lam_val)
+            act = lam > 0.0
+            d = np.asarray(jax.jit(jax.vmap(
+                lambda k: _poisson_ptrs_compact(k, lam, act)))(keys))
+            assert (d[:, np.asarray(~act)] == 0.0).all(), n_heavy
+            heavy = d[:, idx]
+            # every heavy lane is actually sampled (P[all 100 draws = 0]
+            # at lam=35 is ~0), including the rank-(buf) overflow lane
+            assert (heavy.max(axis=0) > 0.0).all(), n_heavy
+            flat = heavy.ravel()
+            se = np.sqrt(lam_val / flat.size)
+            assert flat.mean() == pytest.approx(lam_val, abs=6 * se), n_heavy
+            assert flat.var() == pytest.approx(lam_val, rel=0.15), n_heavy
+            if n_heavy == buf + 1:
+                last = heavy[:, -1]
+                se1 = np.sqrt(lam_val / last.size)
+                assert last.mean() == pytest.approx(lam_val, abs=6 * se1)
+
+
 class TestSimConfigConstruction:
     def test_make_config_defaults_priors(self):
         cfg = make_config(capacity=100.0)

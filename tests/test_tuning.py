@@ -1,0 +1,374 @@
+"""Calibration subsystem: property tests, the serial-bisection oracle, the
+K-curve machinery, and the BENCH row round-trip.
+
+All simulation-backed tests share the session-scoped ``sim_cache`` fixture
+(conftest.py): one small config, one compiled simulator per policy kind,
+memoized theta-grid evaluations — the tier-1 compile count stays flat no
+matter how many calibration properties accumulate here.
+"""
+import numpy as np
+import pytest
+from repro.testing import given, settings, strategies as st
+
+import jax
+
+from repro.core import FIRST, SECOND, ZEROTH, tune_threshold
+from repro.tuning import (KPoint, calibrate, format_kcurve_derived,
+                          from_param, kcurve_divisors, kcurve_row_name,
+                          parse_kcurve_rows, pick_agg_refresh,
+                          pick_from_curve, sla_ci, theta_space, to_param)
+
+KINDS = (ZEROTH, FIRST, SECOND)
+
+#: shared probe ladders (parameter space), memoized per kind in sim_cache
+LADDERS = {
+    ZEROTH: tuple(np.linspace(100.0, 500.0, 9)),
+    FIRST: tuple(np.linspace(100.0, 525.0, 9)),
+    SECOND: tuple(10.0 ** np.linspace(-3.7, -0.05, 9)),
+}
+
+#: empirical curves wiggle by a run-level fluke at most this large (the
+#: aggregate rate moves by whole failed requests over ~6 runs' totals)
+MONOTONE_TOL = 1.5e-3
+
+
+class TestCalibrationProperties:
+    @pytest.mark.parametrize("kind", KINDS, ids=["zeroth", "first", "second"])
+    @settings(max_examples=12, deadline=None)
+    @given(i=st.integers(min_value=0, max_value=8),
+           j=st.integers(min_value=0, max_value=8))
+    def test_sla_failure_monotone_in_theta(self, sim_cache, kind, i, j):
+        """Larger theta admits more -> the aggregate SLA failure rate is
+        nondecreasing in theta (up to trajectory-divergence flukes)."""
+        lo, hi = min(i, j), max(i, j)
+        agg, _ = sim_cache.curve(kind, LADDERS[kind])
+        assert agg[lo] <= agg[hi] + MONOTONE_TOL, (
+            f"kind={kind}: fail({LADDERS[kind][lo]:.4g})={agg[lo]:.4f} > "
+            f"fail({LADDERS[kind][hi]:.4g})={agg[hi]:.4f}")
+
+    @pytest.mark.parametrize("kind", KINDS, ids=["zeroth", "first", "second"])
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_calibrate_invariant_to_grid_permutation(self, sim_cache, kind,
+                                                     seed):
+        """Selection is by candidate value, not grid position: any
+        permutation of the theta grid produces the identical result."""
+        thetas = list(LADDERS[kind])
+        perm = list(np.random.default_rng(seed).permutation(thetas))
+        r1 = calibrate(sim_cache.run(kind), kind, sim_cache.keys,
+                       capacity=sim_cache.cfg.capacity, tau=sim_cache.tau,
+                       thetas=thetas)
+        r2 = calibrate(sim_cache.run(kind), kind, sim_cache.keys,
+                       capacity=sim_cache.cfg.capacity, tau=sim_cache.tau,
+                       thetas=perm)
+        assert r1.theta == r2.theta
+        assert r1.feasible == r2.feasible
+        assert r1.sla_fail == pytest.approx(r2.sla_fail, abs=1e-12)
+        assert r1.utilization == pytest.approx(r2.utilization, rel=1e-6)
+
+    @pytest.mark.parametrize("kind", KINDS, ids=["zeroth", "first", "second"])
+    def test_calibrate_invariant_to_key_order(self, sim_cache, kind):
+        """Runs are exchangeable: permuting the key batch permutes per-run
+        metrics but cannot change the selected theta."""
+        r1 = calibrate(sim_cache.run(kind), kind, sim_cache.keys,
+                       capacity=sim_cache.cfg.capacity, tau=sim_cache.tau,
+                       thetas=list(LADDERS[kind]))
+        r2 = calibrate(sim_cache.run(kind), kind, sim_cache.keys[::-1],
+                       capacity=sim_cache.cfg.capacity, tau=sim_cache.tau,
+                       thetas=list(LADDERS[kind]))
+        assert r1.theta == r2.theta
+        assert r1.sla_fail == pytest.approx(r2.sla_fail, abs=1e-12)
+
+    @pytest.mark.parametrize("kind", KINDS, ids=["zeroth", "first", "second"])
+    def test_calibrated_theta_meets_measured_sla(self, sim_cache, kind):
+        """The returned theta always satisfies the measured SLA constraint
+        (when any candidate does)."""
+        res = calibrate(sim_cache.run(kind), kind, sim_cache.keys,
+                        capacity=sim_cache.cfg.capacity, tau=sim_cache.tau,
+                        n_grid=6, max_stages=2)
+        assert res.feasible
+        assert res.sla_fail <= sim_cache.tau
+        assert res.sla_lo <= res.sla_fail <= res.sla_hi
+        # and the evidence trail agrees: every probed stage marked the
+        # winner's failure rate feasible at its theta
+        final = res.stages[-1]
+        at = np.argmin(np.abs(final.thetas - res.theta))
+        assert final.agg_fail[at] <= sim_cache.tau
+
+    def test_infeasible_everywhere_flags_and_returns_min(self, sim_cache):
+        """tau below every measured rate: feasible=False, smallest (most
+        conservative) candidate returned."""
+        thetas = list(LADDERS[ZEROTH][5:])  # all in the failing regime
+        res = calibrate(sim_cache.run(ZEROTH), ZEROTH, sim_cache.keys,
+                        capacity=sim_cache.cfg.capacity, tau=1e-9,
+                        thetas=thetas)
+        assert not res.feasible
+        assert res.theta == min(thetas)
+
+
+class TestSerialOracle:
+    @pytest.mark.parametrize("kind", KINDS, ids=["zeroth", "first", "second"])
+    def test_batched_calibrate_matches_serial_bisection(self, sim_cache,
+                                                        kind):
+        """``tuning.calibrate`` agrees with the serial
+        ``core.policies.tune_threshold`` bisection reference within one grid
+        step, for the threshold policy and both moment policies — same keys,
+        same simulator, same empirical SLA curve."""
+        cfg, keys, tau = sim_cache.cfg, sim_cache.keys, sim_cache.tau
+        x_lo, x_hi, space = theta_space(kind, cfg.capacity)
+
+        def run_sla(x):
+            agg, _ = sim_cache.curve(kind, [to_param(x, space)])
+            return float(agg[0])
+
+        x_serial = tune_threshold(run_sla, x_lo, x_hi, target_sla=tau,
+                                  iters=9)
+        res = calibrate(sim_cache.run(kind), kind, keys,
+                        capacity=cfg.capacity, tau=tau, n_grid=9,
+                        max_stages=2)
+        assert res.space == space
+        x_batched = from_param(res.theta, space)
+        assert abs(x_batched - x_serial) <= res.grid_step + 1e-9, (
+            f"kind={kind}: batched {x_batched:.4g} vs serial "
+            f"{x_serial:.4g}, final grid step {res.grid_step:.4g}")
+
+
+class TestSlaCi:
+    def test_zero_failures_degenerate_interval(self):
+        rate, lo, hi = sla_ci(np.zeros(8), np.full(8, 100.0))
+        assert rate == lo == hi == 0.0
+
+    def test_covers_rate_and_orders(self):
+        f = np.array([0.0, 2.0, 0.0, 7.0])
+        r = np.array([100.0, 120.0, 90.0, 110.0])
+        rate, lo, hi = sla_ci(f, r)
+        assert lo <= rate <= hi
+        assert rate == pytest.approx(9.0 / 420.0)
+
+    def test_concentrated_failures_widen_interval(self):
+        """Same totals, tail-concentrated failures -> wider cluster-robust
+        interval than evenly spread ones."""
+        r = np.full(8, 100.0)
+        even = np.full(8, 1.0)
+        lumpy = np.zeros(8)
+        lumpy[0] = 8.0
+        _, lo_e, hi_e = sla_ci(even, r)
+        _, lo_l, hi_l = sla_ci(lumpy, r)
+        assert hi_l - lo_l > hi_e - lo_e
+
+
+class TestKCurve:
+    def test_divisors(self):
+        assert kcurve_divisors(1096, 16) == [1, 2, 4, 8]
+        assert kcurve_divisors(912, 16) == [1, 2, 3, 4, 6, 8, 12, 16]
+        assert kcurve_divisors(7, 4) == [1]
+
+    def _points(self):
+        mk = lambda k, ur, sr, feas=True: KPoint(
+            k=k, theta_fixed=0.1, util_fixed=ur - 0.01, slack_fixed=sr,
+            theta_retuned=0.1, util_retuned=ur, slack_retuned=sr,
+            retuned_feasible=feas)
+        return [mk(1, 0.650, 2e-4), mk(2, 0.649, 2e-4), mk(4, 0.647, 1e-4),
+                mk(8, 0.610, -1e-4)]
+
+    def test_pick_prefers_largest_free_k(self):
+        # K=2 within tol of best; K=4 gives up 3e-3 > tol=1e-3; K=8 violates
+        assert pick_from_curve(self._points(), util_tol=1e-3) == 2
+        # looser tolerance buys the larger refresh interval
+        assert pick_from_curve(self._points(), util_tol=5e-3) == 4
+
+    def test_pick_falls_back_to_min_k_when_nothing_feasible(self):
+        pts = [p for p in self._points() if p.k >= 8]
+        assert pick_from_curve(pts) == 8  # only K, infeasible -> smallest
+
+    def test_row_round_trip(self):
+        rows = [{"name": kcurve_row_name("quick", p.k),
+                 "derived": format_kcurve_derived(p)}
+                for p in self._points()]
+        back = parse_kcurve_rows(rows, "quick")
+        assert [p.k for p in back] == [1, 2, 4, 8]
+        for a, b in zip(self._points(), back):
+            assert b.util_retuned == pytest.approx(a.util_retuned, abs=1e-4)
+            assert b.slack_retuned == pytest.approx(a.slack_retuned,
+                                                    rel=1e-2)
+            assert b.retuned_feasible == a.retuned_feasible
+        assert parse_kcurve_rows(rows, "tiny") == []
+
+    def test_pick_agg_refresh_from_bench_artifact(self, tmp_path):
+        import json
+
+        rows = [{"name": kcurve_row_name("quick", p.k), "us_per_call": 1.0,
+                 "derived": format_kcurve_derived(p)}
+                for p in self._points()]
+        path = tmp_path / "BENCH_quick.json"
+        path.write_text(json.dumps({"scale": "quick", "rows": rows}))
+        assert pick_agg_refresh("quick", fallback=99, bench_path=str(path),
+                                util_tol=1e-3) == 2
+        # n_steps must be divisible by the choice or the fallback wins
+        assert pick_agg_refresh("quick", fallback=99, bench_path=str(path),
+                                util_tol=1e-3, n_steps=9) == 1
+        # unrecorded scale -> hand-picked fallback
+        assert pick_agg_refresh("tiny", fallback=4,
+                                bench_path=str(path)) == 4
+
+    def test_pick_agg_refresh_missing_file_falls_back(self, tmp_path):
+        assert pick_agg_refresh("quick", fallback=8,
+                                bench_path=str(tmp_path / "nope.json")) == 8
+
+
+class TestReplayCalibration:
+    @pytest.fixture(scope="class")
+    def scenario_setup(self, sim_cache):
+        from repro.sim import make_run
+        from repro.traces import TraceSpec
+        from repro.tuning import replay_stream_batch
+
+        cfg = sim_cache.cfg._replace(max_arrivals=8)
+        spec = TraceSpec(horizon_hours=cfg.horizon_hours,
+                         arrival_rate=cfg.arrival_rate, max_deployments=128,
+                         max_events=8)
+        streams, run_keys, dropped = replay_stream_batch(
+            jax.random.PRNGKey(11), jax.random.PRNGKey(13), "flash_crowd",
+            spec, cfg, 4)
+        return {"cfg": cfg, "streams": streams, "run_keys": run_keys,
+                "dropped": dropped,
+                "run": make_run(cfg, sim_cache.grid, ZEROTH)}
+
+    def test_stream_batch_shapes(self, scenario_setup, sim_cache):
+        s = scenario_setup
+        assert s["streams"].c0.shape == (4, s["cfg"].n_steps, 8)
+        assert s["run_keys"].shape[0] == 4
+        assert s["dropped"] >= 0
+
+    def test_calibrate_scenario_reports_both_operating_points(
+            self, scenario_setup, sim_cache):
+        from repro.tuning import calibrate_scenario
+
+        s = scenario_setup
+        cal = calibrate_scenario(
+            s["run"], ZEROTH, "flash_crowd", s["streams"], s["run_keys"],
+            capacity=s["cfg"].capacity, tau=sim_cache.tau,
+            stationary_theta=300.0, n_grid=5, max_stages=1)
+        assert cal.stationary_theta == 300.0
+        assert 0.0 <= cal.stationary_util <= 1.0
+        assert cal.retuned.sla_fail <= sim_cache.tau or not cal.retuned.feasible
+        assert cal.util_gap == pytest.approx(
+            cal.retuned.utilization - cal.stationary_util)
+
+
+class TestBenchArtifactMerge:
+    @pytest.fixture()
+    def merge_records(self):
+        import os
+        import sys
+
+        root = os.path.join(os.path.dirname(__file__), "..")
+        sys.path.insert(0, root)
+        try:
+            from benchmarks.run import merge_records as fn
+        finally:
+            sys.path.remove(root)
+        return fn
+
+    def test_merge_replaces_by_name_and_tracks_provenance(self, merge_records,
+                                                          tmp_path):
+        import json
+
+        path = tmp_path / "BENCH_quick.json"
+        path.write_text(json.dumps({
+            "scale": "quick", "seed": 0, "total_seconds": 10.0,
+            "rows": [{"name": "a", "us_per_call": 1.0, "derived": "old",
+                      "seed": 0},
+                     {"name": "b", "us_per_call": 2.0, "derived": "old",
+                      "seed": 0}]}))
+        fresh = [{"name": "b", "us_per_call": 3.0, "derived": "new",
+                  "seed": 1},
+                 {"name": "c", "us_per_call": 4.0, "derived": "new",
+                  "seed": 1}]
+        seed, total, rows = merge_records(str(path), "quick", 1, 5.0, fresh)
+        assert seed == "mixed"          # rows measured under two seeds
+        assert total == 15.0            # compute accumulates across merges
+        assert [r["name"] for r in rows] == ["a", "b", "c"]
+        by = {r["name"]: r for r in rows}
+        assert by["b"]["derived"] == "new" and by["b"]["seed"] == 1
+        assert by["a"]["seed"] == 0     # carried rows keep their provenance
+
+    def test_full_replacement_uses_fresh_provenance(self, merge_records,
+                                                    tmp_path):
+        """Every old row replaced: the artifact's seed/total are this run's
+        alone — no mixed-seed claim, no double-counted compute."""
+        import json
+
+        path = tmp_path / "BENCH_quick.json"
+        path.write_text(json.dumps({
+            "scale": "quick", "seed": 0, "total_seconds": 10.0,
+            "rows": [{"name": "a", "us_per_call": 1.0, "derived": "old",
+                      "seed": 0}]}))
+        fresh = [{"name": "a", "us_per_call": 2.0, "derived": "new",
+                  "seed": 1}]
+        seed, total, rows = merge_records(str(path), "quick", 1, 5.0, fresh)
+        assert seed == 1 and total == 5.0
+        assert rows == fresh
+
+    def test_merge_same_seed_keeps_seed(self, merge_records, tmp_path):
+        import json
+
+        path = tmp_path / "BENCH_quick.json"
+        path.write_text(json.dumps({
+            "scale": "quick", "seed": 0, "total_seconds": 1.0,
+            "rows": [{"name": "kept", "us_per_call": 1.0, "derived": "d",
+                      "seed": 0}]}))
+        seed, total, rows = merge_records(str(path), "quick", 0, 2.0,
+                                          [{"name": "x", "us_per_call": 1.0,
+                                            "derived": "d", "seed": 0}])
+        assert seed == 0 and total == 3.0 and len(rows) == 2
+
+    def test_different_scale_replaces_wholesale(self, merge_records,
+                                                tmp_path):
+        import json
+
+        path = tmp_path / "BENCH_quick.json"
+        path.write_text(json.dumps({"scale": "tiny", "seed": 0,
+                                    "total_seconds": 9.0,
+                                    "rows": [{"name": "a"}]}))
+        fresh = [{"name": "z", "us_per_call": 1.0, "derived": "d", "seed": 2}]
+        seed, total, rows = merge_records(str(path), "quick", 2, 4.0, fresh)
+        assert seed == 2 and total == 4.0 and rows == fresh
+
+
+@pytest.mark.slow
+def test_calibrate_sharding_invariant_on_virtual_devices():
+    """The device-sharded theta-grid pass picks the same theta as the
+    single-device path (8 virtual CPU devices; selection is by value and
+    every candidate sees the identical key batch)."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", """
+import jax, numpy as np
+from repro.core import ZEROTH, geometric_grid
+from repro.sim import make_config, make_run
+from repro.tuning import calibrate
+
+cfg = make_config(capacity=500.0, arrival_rate=0.08, horizon_hours=30*24.0,
+                  dt=24.0, max_slots=96, max_arrivals=4, d_points=8)
+grid = geometric_grid(24.0, 3*30*24.0, 12)
+run = make_run(cfg, grid, ZEROTH)
+keys = jax.random.split(jax.random.PRNGKey(7), 8)
+thetas = list(np.linspace(100.0, 500.0, 8))
+r_multi = calibrate(run, ZEROTH, keys, capacity=cfg.capacity, tau=5e-3,
+                    thetas=thetas, devices=jax.devices())
+r_single = calibrate(run, ZEROTH, keys, capacity=cfg.capacity, tau=5e-3,
+                     thetas=thetas, devices=jax.devices()[:1])
+assert len(jax.devices()) == 8
+assert r_multi.theta == r_single.theta, (r_multi.theta, r_single.theta)
+np.testing.assert_allclose(r_multi.sla_fail, r_single.sla_fail, atol=1e-12)
+np.testing.assert_allclose(r_multi.utilization, r_single.utilization,
+                           rtol=1e-6)
+print('OK', r_multi.theta)
+"""], env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stdout:{out.stdout}\nstderr:{out.stderr}"
