@@ -6,7 +6,7 @@ from __future__ import annotations
 import time
 
 from repro.core import FIRST, SECOND
-from repro.sim import PSEUDO
+from repro.sim import GLOBAL, PSEUDO
 
 from .common import SCALES, csv_row, sim_config, tune_and_eval
 
@@ -21,7 +21,10 @@ def run(scale_name: str = "tiny", seed: int = 0,
     rows = []
     for kind, kname in ((FIRST, "first"), (SECOND, "second")):
         for n_obs in obs_levels:
-            cfg = sim_config(scale, prior_mode=PSEUDO, n_pseudo_obs=n_obs)
+            # the 0-observation point IS the global-prior baseline; say so
+            # explicitly (PSEUDO with 0 obs is rejected by _validate_config)
+            mode = PSEUDO if n_obs > 0 else GLOBAL
+            cfg = sim_config(scale, prior_mode=mode, n_pseudo_obs=n_obs)
             t0 = time.time()
             res = tune_and_eval(scale, kind, cfg, marginal=True,
                                 seed=seed + n_obs)

@@ -1,0 +1,16 @@
+"""Fleet routing benchmark: routers compared at matched fleet SLA.
+
+A thin registration shim over ``scenarios.fleet_rows`` so the fleet rows run
+independently of the (much more expensive) full scenario × policy sweep —
+``python -m benchmarks.run --only fleet`` is what the CI smoke job and the
+BENCH artifact refreshes use. Row names land under ``scenarios/fleet/``:
+one per router (utilization / SLA / tuned rho / rejected-by-all at the
+calibrated operating point) plus a trace-replayed fleet row.
+"""
+from __future__ import annotations
+
+from . import scenarios
+
+
+def run(scale_name: str = "tiny", seed: int = 0) -> list:
+    return scenarios.fleet_rows(scale_name, seed)

@@ -23,8 +23,9 @@ import os
 import sys
 import time
 
-from . import (ablation_marginal, fig1_priors, fig2_pricing, kernels_bench,
-               roofline, scenarios, table2_policies, tuning_bench)
+from . import (ablation_marginal, fig1_priors, fig2_pricing, fleet_bench,
+               kernels_bench, roofline, scenarios, table2_policies,
+               tuning_bench)
 
 MODULES = {
     "kernels": kernels_bench,
@@ -34,6 +35,7 @@ MODULES = {
     "fig2": fig2_pricing,
     "ablation_marginal": ablation_marginal,
     "scenarios": scenarios,
+    "fleet": fleet_bench,
     "tuning": tuning_bench,
 }
 

@@ -28,20 +28,23 @@ iterating on the cheap kernel benchmarks.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import numpy as np
 
-from repro.core import AZURE_PRIORS, FIRST, SECOND, ZEROTH, make_policy
-from repro.sim import (GLOBAL, MIX_LABELED, PSEUDO, estimate_from_plan,
+from repro.core import (AZURE_PRIORS, FIRST, SECOND, ZEROTH, fleet_policy,
+                        make_policy)
+from repro.sim import (GLOBAL, MIX_LABELED, PSEUDO, ROUTERS, FleetConfig,
+                       estimate_from_plan, make_fleet_run,
                        make_importance_plan, make_run,
-                       make_trace_ensemble_plan, simulate_plan,
-                       simulate_trace_plan)
-from repro.traces import (TraceSpec, fit_priors, prior_relative_errors,
-                          scenario_names, synthesize_scenario,
-                          trace_to_stream)
-from repro.tuning import calibrate_scenario, replay_stream_batch
+                       make_trace_ensemble_plan, run_keyed_batch,
+                       simulate_plan, simulate_trace_plan, sla_failure_rate)
+from repro.traces import (TraceArrivalSource, TraceSpec, fit_priors,
+                          prior_relative_errors, scenario_names,
+                          synthesize_scenario, trace_to_stream)
+from repro.tuning import calibrate, calibrate_scenario, replay_stream_batch
 
 from .common import SCALES, csv_row, grid_for, sim_config, tune_and_eval
 
@@ -66,6 +69,94 @@ def trace_spec_for(cfg) -> TraceSpec:
                      arrival_rate=cfg.arrival_rate,
                      max_deployments=int(cap), max_events=16,
                      priors=AZURE_PRIORS)
+
+
+#: heterogeneous fleet split of the preset capacity (a big, two mid, a small
+#: cluster) — heterogeneity is what separates capacity-aware routers from
+#: the random baseline
+FLEET_FRACS = (0.4, 0.3, 0.2, 0.1)
+FLEET_ROUTERS = ("least_utilized", "power_of_two", "random", "cascade")
+
+
+def fleet_rows(scale_name: str = "tiny", seed: int = 0) -> list:
+    """Fleet router comparison at matched fleet SLA (+ trace replay).
+
+    The preset capacity is split into a heterogeneous fleet
+    (``FLEET_FRACS``); for every router the shared second-moment policy is
+    calibrated against the *fleet* SLA target in one flattened
+    device-sharded pass (``tuning.calibrate`` with a ``fleet_policy``
+    closure — per-cluster thresholds stay capacity-proportional), so the
+    reported utilizations compare routers at the same risk budget. A final
+    row replays a synthesized baseline trace into the fleet: arrivals come
+    from the trace, the router still decides the cluster.
+
+    Under ``REPRO_SMOKE=1`` (the CI docs job) everything shrinks to a
+    two-cluster fleet on a short horizon so the rows land in seconds.
+    """
+    scale = SCALES[scale_name]
+    smoke = os.environ.get("REPRO_SMOKE") == "1"
+    if smoke:
+        cfg = sim_config(scale, horizon_hours=60 * 24.0, dt=24.0,
+                         max_slots=128)
+        n_runs, n_grid = 2, 3
+        fracs = (0.6, 0.4)
+    else:
+        cfg = sim_config(scale)
+        n_runs, n_grid = scale.n_runs, scale.n_thresholds
+        fracs = FLEET_FRACS
+    caps = tuple(round(f * scale.capacity, 1) for f in fracs)
+    base = cfg._replace(max_slots=max(cfg.max_slots // 2, 64))
+    fcfg = FleetConfig(base=base, capacities=caps)
+    grid = grid_for(scale, cfg)
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, n_runs)
+    # one closure for every router: keeps tuning's compiled-wrapper cache hot
+    policy_fn = lambda th: fleet_policy(SECOND, capacities=caps, rho=th)
+
+    rows = []
+    thetas = {}
+    for rname in FLEET_ROUTERS:
+        t0 = time.time()
+        run_fn = make_fleet_run(fcfg, grid, SECOND, router=ROUTERS[rname]())
+        cal = calibrate(run_fn, SECOND, keys,
+                        capacity=fcfg.total_capacity, tau=scale.tau,
+                        n_grid=n_grid, max_stages=1, policy_fn=policy_fn)
+        thetas[rname] = cal.theta
+        # one extra pass at the winner for the routing diagnostics the
+        # CalibrationResult does not carry (rejected-by-all, spread)
+        m = run_keyed_batch(run_fn, keys, policy_fn(cal.theta))
+        rej_all = float(np.mean(np.asarray(m.rejected_by_all)))
+        spread = np.asarray(m.per_cluster.utilization).mean(axis=0)
+        rows.append(csv_row(
+            f"scenarios/fleet/{rname}", (time.time() - t0) * 1e6,
+            f"util={cal.utilization:.4f} sla={cal.sla_fail:.2e}"
+            f" rho={cal.theta:.4g} feasible={cal.feasible}"
+            f" rej_all={rej_all:.1f}"
+            f" util_spread={spread.max() - spread.min():.3f}"
+            f" n_clusters={len(caps)} tau={scale.tau:g}"))
+
+    # -- a recorded trace replayed INTO the fleet (arrivals routed live) -----
+    t0 = time.time()
+    spec = trace_spec_for(cfg)
+    trace = synthesize_scenario(jax.random.fold_in(key, 7), "baseline", spec)
+    source = TraceArrivalSource(trace)
+    # replay widens the per-step arrival cap like the scenario sweep does:
+    # trace bursts should stress the router+policy, not the columnar buffer
+    rcfg = FleetConfig(base=base._replace(max_arrivals=REPLAY_MAX_ARRIVALS),
+                       capacities=caps)
+    run_fn = make_fleet_run(rcfg, grid, SECOND,
+                            router=ROUTERS["least_utilized"](),
+                            arrival_source=source)
+    theta = thetas["least_utilized"]
+    m = run_keyed_batch(run_fn, keys, policy_fn(theta))
+    util = float(np.mean(np.asarray(m.utilization)))
+    sla = sla_failure_rate(np.asarray(m.failed_requests),
+                           np.asarray(m.total_requests))
+    rows.append(csv_row(
+        "scenarios/fleet/replay_least_utilized", (time.time() - t0) * 1e6,
+        f"util={util:.4f} sla={sla:.2e} rho={theta:.4g}"
+        f" dropped={source.n_dropped(rcfg)}"))
+    return rows
 
 
 def run(scale_name: str = "tiny", seed: int = 0, tune: bool = False) -> list:

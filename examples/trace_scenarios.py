@@ -88,10 +88,12 @@ def main():
           f"fitted E[mu]={real_fit.mu_shape / real_fit.mu_rate:.4f}/h")
     horizon = float(np.asarray(real.horizon_hours))
     n_steps = max(int(horizon // 24.0), 1)
+    # n_pseudo_obs is ignored by observed-trace replay (the logged history
+    # defines the information content); >= 1 satisfies the PSEUDO validation
     real_cfg = make_config(capacity=200.0, arrival_rate=0.05,
                            horizon_hours=n_steps * 24.0, dt=24.0,
                            max_slots=64, max_arrivals=8, d_points=8,
-                           prior_mode=PSEUDO)
+                           prior_mode=PSEUDO, n_pseudo_obs=1)
     real_run = make_run(real_cfg, geometric_grid(24.0, 3 * horizon, 16),
                         SECOND,
                         arrival_source=TraceArrivalSource(real))

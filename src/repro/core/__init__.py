@@ -16,9 +16,9 @@ from .belief import (GammaBelief, belief_from_prior, update_on_events,
                      pseudo_counts_from_observables)
 from .moments import (MomentCurves, aggregate_moment_curves, moment_curves,
                       moment_curves_discrete, moment_curves_fused)
-from .policies import (ZEROTH, FIRST, SECOND, PolicyParams, make_policy,
-                       geometric_grid, paper_cascade, decide, admit_sequential,
-                       is_safe, tune_threshold)
+from .policies import (ZEROTH, FIRST, SECOND, PolicyParams, fleet_policy,
+                       make_policy, geometric_grid, paper_cascade, decide,
+                       admit_sequential, is_safe, tune_threshold)
 from . import pomdp, pricing
 
 __all__ = [
@@ -29,7 +29,8 @@ __all__ = [
     "pseudo_counts_from_observables",
     "MomentCurves", "aggregate_moment_curves", "moment_curves",
     "moment_curves_discrete", "moment_curves_fused", "ZEROTH",
-    "FIRST", "SECOND", "PolicyParams", "make_policy", "geometric_grid",
+    "FIRST", "SECOND", "PolicyParams", "fleet_policy", "make_policy",
+    "geometric_grid",
     "paper_cascade", "decide", "admit_sequential", "is_safe",
     "tune_threshold", "pomdp", "pricing",
 ]

@@ -49,6 +49,31 @@ def make_policy(kind: int, *, threshold: float = 0.0, rho: float = 0.0,
     )
 
 
+def fleet_policy(kind: int, *, capacities, threshold: float = 0.0,
+                 rho: float = 0.0, marginal: bool = False) -> PolicyParams:
+    """PolicyParams broadcast over the cluster axis of a heterogeneous fleet.
+
+    Every field gets a leading ``[C]`` axis so the fleet simulator can vmap
+    admission per cluster. ``threshold`` is a *fleet-total* core budget split
+    across clusters proportional to capacity — one scalar therefore tunes
+    heterogeneous per-cluster thresholds, which is what lets the flattened
+    device-sharded calibration pass (``tuning.calibrate`` with a
+    ``policy_fn``) search fleet policies on the same scalar grid as
+    single-cluster ones. ``rho`` (the Cantelli bound, scale-free) and the
+    marginal flag are shared across clusters.
+    """
+    caps = jnp.asarray(capacities, jnp.float32)
+    n_c = caps.shape[0]
+    frac = caps / jnp.sum(caps)
+    return PolicyParams(
+        kind=jnp.full((n_c,), kind, jnp.int32),
+        threshold=jnp.asarray(threshold, jnp.float32) * frac,
+        rho=jnp.full((n_c,), rho, jnp.float32),
+        capacity=caps,
+        marginal_eps=jnp.full((n_c,), 1e-5 if marginal else 0.0, jnp.float32),
+    )
+
+
 def geometric_grid(t_min: float = 1.0, t_max: float = 3 * 365 * 24.0, n: int = 48):
     """Geometric horizon grid (hours). Beyond-paper: replaces the 5-subpolicy
     cascade with one log-spaced grid covering 1h..3y."""

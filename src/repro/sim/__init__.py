@@ -1,10 +1,22 @@
-"""Monte-Carlo cluster simulation substrate (paper §5 evaluation machinery)."""
+"""Monte-Carlo cluster simulation substrate (paper §5 evaluation machinery).
+
+Two simulator entry points share one step machinery: ``make_run`` (a single
+cluster — the paper's §5 setting) and ``make_fleet_run`` (a fleet of
+heterogeneous clusters with a routing layer ahead of per-cluster admission —
+the paper's §2 provider view). Routers live in ``sim.routing``.
+"""
 from .simulator import (AGG_FUSED, AGG_KERNEL, AGG_REFERENCE, GLOBAL, PSEUDO,
                         MIX_LABELED, MIX_UNLABELED, ArrivalSource,
-                        ArrivalStream, PriorArrivalSource, RunMetrics,
-                        SimConfig, draw_arrival_stream, make_config, make_run,
-                        run_batch, run_keyed_batch)
-from .metrics import CI, bca_ci, sla_failure_rate, weighted_mean
+                        ArrivalStream, FleetConfig, FleetMetrics,
+                        PriorArrivalSource, RunMetrics, SimConfig,
+                        broadcast_policy, draw_arrival_stream, make_config,
+                        make_fleet_config, make_fleet_run, make_run,
+                        run_batch, run_keyed_batch, stream_config)
+from .routing import (ROUTERS, LeastUtilizedRouter, PowerOfTwoRouter,
+                      RandomRouter, RouteContext, Router,
+                      ThresholdCascadeRouter)
+from .metrics import (CI, bca_ci, fleet_sla_failure_rate, fleet_utilization,
+                      sla_failure_rate, weighted_mean)
 from .importance import (ImportancePlan, TraceEnsemblePlan, badness_measure,
                          estimate_from_plan, make_importance_plan,
                          make_trace_ensemble_plan, rejection_q, simulate_plan,
@@ -13,10 +25,14 @@ from .importance import (ImportancePlan, TraceEnsemblePlan, badness_measure,
 __all__ = [
     "AGG_FUSED", "AGG_KERNEL", "AGG_REFERENCE", "GLOBAL", "PSEUDO",
     "MIX_LABELED", "MIX_UNLABELED", "ArrivalSource", "ArrivalStream",
-    "PriorArrivalSource", "RunMetrics",
-    "SimConfig", "draw_arrival_stream", "make_config", "make_run",
-    "run_batch", "run_keyed_batch",
-    "CI", "bca_ci", "sla_failure_rate", "weighted_mean", "ImportancePlan",
+    "FleetConfig", "FleetMetrics", "PriorArrivalSource", "RunMetrics",
+    "SimConfig", "broadcast_policy", "draw_arrival_stream", "make_config",
+    "make_fleet_config", "make_fleet_run", "make_run",
+    "run_batch", "run_keyed_batch", "stream_config",
+    "ROUTERS", "LeastUtilizedRouter", "PowerOfTwoRouter", "RandomRouter",
+    "RouteContext", "Router", "ThresholdCascadeRouter",
+    "CI", "bca_ci", "fleet_sla_failure_rate", "fleet_utilization",
+    "sla_failure_rate", "weighted_mean", "ImportancePlan",
     "TraceEnsemblePlan", "badness_measure", "estimate_from_plan",
     "make_importance_plan", "make_trace_ensemble_plan", "rejection_q",
     "simulate_plan", "simulate_trace_plan", "stream_badness",

@@ -42,7 +42,7 @@ from ..core.moments import moment_curves_fused
 from .metrics import sla_failure_rate, weighted_mean
 from .simulator import (ArrivalSource, ArrivalStream, RunMetrics, SimConfig,
                         draw_arrival_stream, run_keyed_batch,
-                        shard_batch_over_devices)
+                        shard_batch_over_devices, stream_config)
 
 HOURS_PER_MONTH = 730.0
 
@@ -67,6 +67,7 @@ def badness_measure(key: jax.Array, cfg: SimConfig, grid: jax.Array,
     arrival-side tail then only exists *across* traces: bucket a trace
     ensemble instead via ``make_trace_ensemble_plan``/``stream_badness``.
     """
+    cfg = stream_config(cfg)
     k_stream, k_scan = jax.random.split(key)
     k_life = jax.random.fold_in(k_scan, 99)
     stream = (draw_arrival_stream(k_stream, cfg) if source is None
@@ -83,7 +84,15 @@ def stream_badness(k_life: jax.Array, stream: ArrivalStream, cfg: SimConfig,
     entirely the stream's. This is the primitive trace-level bucketing
     builds on: replay streams are arrival-deterministic per trace, so BM
     computed here ranks *traces*, not run keys.
+
+    ``cfg`` may be a ``FleetConfig``: the badness measure **reduces over
+    clusters** — the simplified greedy schedule admits against the fleet's
+    *total* capacity (``stream_config``), because BM describes the
+    arrival-side tail of the whole pre-drawn stream, before any routing.
+    Importance plans built on it therefore bucket fleet runs exactly like
+    single-cluster runs of the same total capacity.
     """
+    cfg = stream_config(cfg)
     t_steps, a_max = stream.c0.shape
     n_dep = t_steps * a_max
 
@@ -197,7 +206,13 @@ def make_importance_plan(
     c = 20k, i.e. 1.25c / 1.5c). Probes ``n_probe`` cheap BM evaluations to
     estimate p(I_i); selects runs until each bucket quota is met (buckets that
     the probe never hits keep weight 0).
+
+    With a ``FleetConfig`` the bucket edges scale with the fleet's *total*
+    capacity and BM reduces over clusters (see ``stream_badness``), so the
+    plan's keys feed ``make_fleet_run`` runs unchanged —
+    ``estimate_from_plan`` consumes the fleet-level ``FleetMetrics`` fields.
     """
+    cfg = stream_config(cfg)
     edges = np.asarray(edges_frac) * cfg.capacity
     bm_fn = _probe_fn(cfg, grid, source=source)
     keys = jax.random.split(key, n_probe)
@@ -294,6 +309,7 @@ def make_trace_ensemble_plan(
     The whole ensemble is BM-probed in one vmapped pass (per-trace keys
     drive only the simplified schedule's lifetime clocks).
     """
+    cfg = stream_config(cfg)
     edges = np.asarray(edges_frac) * cfg.capacity
     n_traces = len(streams)
     if n_traces == 0:
@@ -352,7 +368,9 @@ def estimate_from_plan(plan, metrics: RunMetrics) -> dict:
     ``ImportancePlan`` or trace-level ``TraceEnsemblePlan`` — only the
     weights are consumed): weighted utilization and the aggregate SLA
     failure rate (weights are the estimated bucket masses spread over each
-    bucket's runs, so rare bad runs count at their true probability)."""
+    bucket's runs, so rare bad runs count at their true probability).
+    ``metrics`` may equally be a ``FleetMetrics`` batch — its fleet-level
+    utilization/failure fields are already reduced over clusters."""
     w = plan.weights
     return {
         "utilization": weighted_mean(np.asarray(metrics.utilization), w),

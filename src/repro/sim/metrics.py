@@ -79,6 +79,32 @@ def bca_ci(
     return CI(estimate=float(theta_hat), lo=float(lo), hi=float(hi))
 
 
+def fleet_utilization(util_clusters: np.ndarray,
+                      capacities: np.ndarray) -> np.ndarray:
+    """Fleet utilization from per-cluster utilizations: the capacity-weighted
+    mean over the trailing cluster axis (equals total core-hours over total
+    capacity-hours, which is what ``FleetMetrics.utilization`` reports)."""
+    u = np.asarray(util_clusters, dtype=np.float64)
+    c = np.asarray(capacities, dtype=np.float64)
+    return np.sum(u * c, axis=-1) / np.sum(c)
+
+
+def fleet_sla_failure_rate(failed_clusters: np.ndarray,
+                           requests_clusters: np.ndarray,
+                           weights: Optional[np.ndarray] = None) -> float:
+    """Aggregate fleet SLA failure rate from per-cluster run totals.
+
+    ``failed_clusters``/``requests_clusters`` carry a trailing cluster axis
+    (leading axes are runs); counts are summed over clusters first — the
+    fleet SLA is one constraint over the whole fleet's requests, not a mean
+    of per-cluster rates — then aggregated over runs exactly like
+    ``sla_failure_rate`` (optionally importance-weighted).
+    """
+    f = np.asarray(failed_clusters, dtype=np.float64).sum(axis=-1)
+    r = np.asarray(requests_clusters, dtype=np.float64).sum(axis=-1)
+    return sla_failure_rate(f, r, weights=weights)
+
+
 def sla_failure_rate(total_failed: np.ndarray, total_requests: np.ndarray,
                      weights: Optional[np.ndarray] = None) -> float:
     """Aggregate SLA failure fraction over runs (failures are concentrated in

@@ -1,0 +1,171 @@
+"""Fleet routing: assign each arriving deployment to a cluster (paper §2).
+
+The paper frames the provider's problem as dispatch-then-admit: a workload
+first goes to one of many clusters, and that cluster's admission policy then
+accepts or rejects it. ``make_fleet_run`` calls a ``Router`` once per step,
+*before* ``core.policies.admit_sequential`` runs inside the target cluster —
+so a router chooses where an arrival is considered, and the per-cluster
+policy still has the final word.
+
+A router maps the step's ``[A]`` pre-drawn arrivals to cluster indices in
+``[0, C)`` — or to the sentinel ``C`` ("no cluster would take it"), which
+the fleet simulator counts as **rejected-by-all** without entering any
+cluster's admission scan. Routers see the ``RouteContext``: the candidates'
+moment curves, each cluster's maintained aggregate curves and instantaneous
+utilization, the per-cluster capacities, and the (cluster-axis-broadcast)
+fleet policy. All routers are traceable (they run inside the jitted scan).
+
+Shipped routers:
+
+  * ``RandomRouter``          — uniform over clusters (the null baseline).
+  * ``LeastUtilizedRouter``   — lowest utilization *fraction*, folding each
+    routed arrival's request into the running utilization so a burst within
+    one step spreads instead of dogpiling (a small lax.scan over arrivals).
+  * ``PowerOfTwoRouter``      — classic power-of-two-choices, scored on the
+    per-cluster aggregate moment curves (predicted peak load fraction
+    ``max_n agg_EL / capacity``); falls back to instantaneous utilization
+    when the policy kind carries no curves (zeroth).
+  * ``ThresholdCascadeRouter``— mirrors the paper's per-cluster policy: try
+    clusters in index order and take the first whose admission condition
+    (``core.policies.decide`` on the current aggregates) would accept;
+    arrivals no cluster would accept get the rejected-by-all sentinel.
+    Stateless within a step on purpose: the authoritative sequential
+    accounting still happens in the target cluster's ``admit_sequential``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.moments import MomentCurves
+from ..core.policies import PolicyParams, decide
+
+
+class RouteContext(NamedTuple):
+    """Everything a router may consult for one step's assignment."""
+
+    cand: MomentCurves       # [A, N] candidate moment curves
+    c0: jax.Array            # [A] requested initial cores
+    valid: jax.Array         # [A] bool: slot actually carries an arrival
+    agg_el: jax.Array        # [C, N] per-cluster maintained aggregate E[L]
+    agg_vl: jax.Array        # [C, N] per-cluster maintained aggregate V[L]
+    util: jax.Array          # [C] instantaneous active cores per cluster
+    capacities: jax.Array    # [C] per-cluster core capacities
+    policy: PolicyParams     # cluster-axis-broadcast fleet policy ([C] fields)
+
+    @property
+    def n_clusters(self) -> int:
+        return self.capacities.shape[0]
+
+
+class Router:
+    """Pluggable arrival→cluster assignment. Subclasses implement ``route``.
+
+    ``route`` must be traceable and return an ``[A]`` int32 vector of
+    cluster indices in ``[0, C]`` — the value ``C`` is the rejected-by-all
+    sentinel. Entries for invalid arrival slots are ignored.
+    """
+
+    name: str = "?"
+
+    def route(self, key: jax.Array, ctx: RouteContext) -> jax.Array:
+        raise NotImplementedError
+
+
+class RandomRouter(Router):
+    """Uniform random assignment — the null baseline every other router must
+    beat at matched fleet SLA."""
+
+    name = "random"
+
+    def route(self, key: jax.Array, ctx: RouteContext) -> jax.Array:
+        return jax.random.randint(key, ctx.c0.shape, 0, ctx.n_clusters,
+                                  dtype=jnp.int32)
+
+
+class LeastUtilizedRouter(Router):
+    """Send each arrival to the cluster with the lowest utilization fraction.
+
+    Arrivals within one step are assigned sequentially, folding each routed
+    request's ``c0`` into the running utilization, so a same-step burst
+    spreads across clusters instead of all chasing the same pre-step argmin.
+    """
+
+    name = "least_utilized"
+
+    def route(self, key: jax.Array, ctx: RouteContext) -> jax.Array:
+        idx = jnp.arange(ctx.n_clusters)
+
+        def pick(u, x):
+            c0, ok = x
+            c = jnp.argmin(u / ctx.capacities).astype(jnp.int32)
+            u = u + jnp.where((idx == c) & ok, c0, 0.0)
+            return u, c
+
+        _, assign = jax.lax.scan(pick, ctx.util, (ctx.c0, ctx.valid))
+        return assign
+
+
+class PowerOfTwoRouter(Router):
+    """Power-of-two-choices over the per-cluster aggregate moment curves.
+
+    Each arrival samples two *distinct* clusters (the second choice is
+    uniform over the rest, the classic without-replacement scheme — with
+    replacement, 1/C of arrivals would degenerate to pure random routing)
+    and takes the one whose predicted peak load fraction —
+    ``max_n agg_EL[c, n] / capacity_c``, the same aggregate the admission
+    policies consume — is lower. With a zeroth-moment policy the maintained
+    curves are identically zero, so the score falls back to the
+    instantaneous utilization fraction (making the router the classic
+    load-based po2 there).
+    """
+
+    name = "power_of_two"
+
+    def route(self, key: jax.Array, ctx: RouteContext) -> jax.Array:
+        n_c = ctx.n_clusters
+        ka, kb = jax.random.split(key)
+        a = jax.random.randint(ka, ctx.c0.shape, 0, n_c, dtype=jnp.int32)
+        off = jax.random.randint(kb, ctx.c0.shape, 0, max(n_c - 1, 1),
+                                 dtype=jnp.int32)
+        b = (a + 1 + off) % n_c
+        curve_score = jnp.max(ctx.agg_el, axis=1) / ctx.capacities
+        util_score = ctx.util / ctx.capacities
+        score = jnp.where(jnp.max(ctx.agg_el) > 0.0, curve_score, util_score)
+        return jnp.where(score[a] <= score[b], a, b)
+
+
+class ThresholdCascadeRouter(Router):
+    """First cluster (in index order) whose admission policy would accept.
+
+    Evaluates ``core.policies.decide`` for every (cluster, arrival) pair on
+    the clusters' current maintained aggregates; an arrival is routed to the
+    lowest-index accepting cluster, and to the rejected-by-all sentinel
+    ``C`` when no cluster's condition holds. This mirrors the paper's
+    per-cluster policy applied fleet-wide: the dispatch layer never admits
+    anything the cluster policy wouldn't. Within-step interactions (an
+    earlier arrival filling the cluster) are resolved by the target
+    cluster's own ``admit_sequential``, which remains authoritative.
+    """
+
+    name = "cascade"
+
+    def route(self, key: jax.Array, ctx: RouteContext) -> jax.Array:
+        would_accept = jax.vmap(                 # over clusters ->
+            lambda pol_c, el, vl, u: jax.vmap(   # over arrivals
+                lambda ce, cv, c0: decide(pol_c, el, vl, u,
+                                          MomentCurves(ce, cv), c0))(
+                ctx.cand.EL, ctx.cand.VL, ctx.c0))(
+            ctx.policy, ctx.agg_el, ctx.agg_vl, ctx.util)        # [C, A]
+        first = jnp.argmax(would_accept, axis=0).astype(jnp.int32)
+        return jnp.where(jnp.any(would_accept, axis=0), first,
+                         jnp.int32(ctx.n_clusters))
+
+
+#: name -> zero-arg factory, for benchmarks and CLI surfaces
+ROUTERS = {
+    r.name: r for r in (RandomRouter, LeastUtilizedRouter, PowerOfTwoRouter,
+                        ThresholdCascadeRouter)
+}

@@ -26,6 +26,19 @@ reference, or the Pallas aggregate kernel (``agg_backend``) — and maintained
 incrementally inside the block by folding placed candidates' curves into
 the running sums. Per-decision cost is therefore O(grid), independent of the
 slot-array size, which is what makes the paper-scale preset feasible on CPU.
+
+**Fleet mode** (paper §2's provider view: dispatch *then* admit): the same
+step machinery runs with a leading cluster axis. ``make_fleet_run`` simulates
+``FleetConfig.n_clusters`` heterogeneous clusters in one scan — ``SimState``,
+the maintained aggregate curves, and the per-cluster ``RunMetrics`` all carry
+a leading ``[C]`` axis (vmap inside the scan body; ``capacity`` becomes the
+per-cluster array), and the blocked ``agg_refresh_steps`` refresh runs per
+cluster. A pluggable ``sim.routing.Router`` maps each fleet-wide arrival to
+a target cluster *before* ``admit_sequential`` runs there (arrivals no
+cluster would take are counted as rejected-by-all). A one-cluster fleet
+reproduces the single-cluster simulator key-for-key: cluster 0 keeps the
+undiverted per-step key chain and the per-cluster step helpers are exactly
+the single-cluster code path.
 """
 from __future__ import annotations
 
@@ -103,6 +116,16 @@ def _validate_config(cfg: SimConfig) -> SimConfig:
         raise ValueError(f"unknown prior_mode {cfg.prior_mode!r}")
     if cfg.agg_backend not in (AGG_FUSED, AGG_REFERENCE, AGG_KERNEL):
         raise ValueError(f"unknown agg_backend {cfg.agg_backend!r}")
+    if cfg.n_pseudo_obs < 0:
+        raise ValueError(f"n_pseudo_obs={cfg.n_pseudo_obs} must be >= 0")
+    if cfg.prior_mode != GLOBAL and cfg.n_pseudo_obs == 0:
+        raise ValueError(
+            f"prior_mode={cfg.prior_mode!r} with n_pseudo_obs=0 silently "
+            "degenerates to GLOBAL (zero pseudo observations leave every "
+            "belief — including the §7 mixture components — at the "
+            "population prior): use prior_mode=GLOBAL, or set "
+            "n_pseudo_obs >= 1"
+        )
     if cfg.n_steps <= 0 or cfg.max_slots <= 0 or cfg.max_arrivals <= 0:
         raise ValueError(
             f"degenerate SimConfig: n_steps={cfg.n_steps} "
@@ -113,6 +136,65 @@ def _validate_config(cfg: SimConfig) -> SimConfig:
             f"agg_refresh_steps={cfg.agg_refresh_steps} must be >= 1 and "
             f"divide n_steps={cfg.n_steps}"
         )
+    return cfg
+
+
+class FleetConfig(NamedTuple):
+    """Static fleet configuration: a per-cluster ``SimConfig`` template plus
+    the per-cluster capacities.
+
+    ``base`` describes each cluster's slot array, step size, information
+    model, and aggregate-refresh blocking — *and* the fleet-wide arrival
+    process (``arrival_rate``/``max_arrivals`` are the whole fleet's: one
+    stream is drawn and routed, not one per cluster). ``base.capacity``
+    conventionally holds the fleet total (``make_fleet_config`` sets it);
+    the authoritative per-cluster capacities are ``capacities``.
+    """
+
+    base: SimConfig
+    capacities: tuple                # per-cluster core capacities (static)
+
+    @property
+    def n_clusters(self) -> int:
+        return len(self.capacities)
+
+    @property
+    def total_capacity(self) -> float:
+        return float(sum(self.capacities))
+
+
+def make_fleet_config(capacities, **base_overrides) -> FleetConfig:
+    """Documented FleetConfig constructor: ``base_overrides`` build the
+    per-cluster template through ``make_config`` (so priors default to
+    AZURE_PRIORS and every field is validated); ``base.capacity`` defaults
+    to the fleet total."""
+    caps = tuple(float(c) for c in capacities)
+    base_overrides.setdefault("capacity", sum(caps))
+    return _validate_fleet_config(
+        FleetConfig(base=make_config(**base_overrides), capacities=caps))
+
+
+def _validate_fleet_config(fcfg: FleetConfig) -> FleetConfig:
+    if not fcfg.capacities:
+        raise ValueError("FleetConfig.capacities is empty")
+    if any(not np.isfinite(c) or c <= 0.0 for c in fcfg.capacities):
+        raise ValueError(
+            f"FleetConfig.capacities must be positive, got {fcfg.capacities}")
+    _validate_config(fcfg.base)
+    return fcfg
+
+
+def stream_config(cfg) -> SimConfig:
+    """The ``SimConfig`` governing arrival-stream layout and priors.
+
+    Identity for a plain ``SimConfig``; for a ``FleetConfig`` it is the base
+    template with the fleet-total capacity — fleet arrivals are drawn (or
+    replayed) fleet-wide and only routed to clusters at simulation time, so
+    everything stream-shaped (``draw_arrival_stream``, trace replay, badness
+    measures) works on this reduced config.
+    """
+    if isinstance(cfg, FleetConfig):
+        return cfg.base._replace(capacity=cfg.total_capacity)
     return cfg
 
 
@@ -158,8 +240,36 @@ class RunMetrics(NamedTuple):
     arrivals_accepted: jax.Array
     arrivals_rejected: jax.Array
     slot_overflow: jax.Array      # arrivals lost to slot-array exhaustion
+    n_departed: jax.Array         # deployments that died (spontaneous or
+                                  # core exhaustion) over the whole run
+    alive_end: jax.Array          # deployments still alive at the horizon
     util_trace: jax.Array         # [T] active cores after each step
     fail_trace: jax.Array         # [T] failed requests per step
+
+
+class FleetMetrics(NamedTuple):
+    """Fleet-level reductions plus the per-cluster ``RunMetrics``.
+
+    The scalar fields mirror ``RunMetrics`` reduced over the cluster axis
+    (capacity-weighted utilization; summed counts) so fleet runs drop into
+    any consumer of run-level metrics — ``estimate_from_plan``, the SLA
+    aggregation in ``sim.metrics`` — unchanged. ``per_cluster`` carries the
+    full ``[C]``-leading per-cluster metrics (``util_trace`` is ``[C, T]``).
+    """
+
+    utilization: jax.Array        # total core-hours / (horizon * total capacity)
+    failure_rate: jax.Array       # summed failures / summed requests
+    total_requests: jax.Array
+    failed_requests: jax.Array
+    arrivals_accepted: jax.Array
+    arrivals_rejected: jax.Array  # per-cluster rejections + rejected_by_all
+    rejected_by_all: jax.Array    # arrivals the router could place nowhere
+                                  # (threshold-cascade sentinel; 0 for
+                                  # single-target routers)
+    slot_overflow: jax.Array
+    util_trace: jax.Array         # [T] fleet active cores after each step
+    fail_trace: jax.Array         # [T] fleet failed requests per step
+    per_cluster: RunMetrics       # leading [C] axis on every field
 
 
 class SimState(NamedTuple):
@@ -173,10 +283,12 @@ class SimState(NamedTuple):
     arr_accepted: jax.Array
     arr_rejected: jax.Array
     slot_overflow: jax.Array
+    n_departed: jax.Array
 
 
 def draw_arrival_stream(key: jax.Array, cfg: SimConfig) -> ArrivalStream:
     """Pre-draw every arrival's true params, request size and prior belief."""
+    cfg = stream_config(cfg)
     t_steps, a_max = cfg.n_steps, cfg.max_arrivals
     shape = (t_steps, a_max)
     kn, kp, kc, ko, kq, kb = jax.random.split(key, 6)
@@ -225,6 +337,7 @@ def _init_state(cfg: SimConfig) -> SimState:
         arr_accepted=jnp.zeros(()),
         arr_rejected=jnp.zeros(()),
         slot_overflow=jnp.zeros(()),
+        n_departed=jnp.zeros(()),
     )
 
 
@@ -299,6 +412,111 @@ def _make_aggregate_fn(cfg: SimConfig, grid: jax.Array):
     return aggregate
 
 
+def _make_curves_fn(cfg: SimConfig):
+    """Per-candidate moment-curve evaluator (fused jnp or Pallas kernel)."""
+    if cfg.use_kernel:
+        from ..kernels.moment_curves.ops import moment_curves_kernel
+
+        def curves_fn(bel, cores, grid_, priors, d_points):
+            flat_bel = jax.tree.map(lambda a: a.reshape(-1), bel)
+            out = moment_curves_kernel(flat_bel, cores.reshape(-1), grid_,
+                                       priors, d_points=d_points)
+            shape = cores.shape + (grid_.shape[0],)
+            return MomentCurves(out.EL.reshape(shape), out.VL.reshape(shape))
+
+        return curves_fn
+    return moment_curves_fused
+
+
+def _make_candidates_fn(cfg: SimConfig, grid: jax.Array, needs_moments: bool,
+                        n_grid: int, curves_fn):
+    """[A, N] candidate curves for one step's pre-drawn arrivals (mixture
+    moments in the §7 unlabeled mode; zeros when the policy ignores them)."""
+
+    def candidates(stream_t: ArrivalStream) -> MomentCurves:
+        if not needs_moments:
+            return MomentCurves(EL=jnp.zeros((cfg.max_arrivals, n_grid)),
+                                VL=jnp.zeros((cfg.max_arrivals, n_grid)))
+        cand = curves_fn(stream_t.bel, stream_t.c0, grid, cfg.priors,
+                         d_points=cfg.d_points)
+        if cfg.prior_mode == MIX_UNLABELED:
+            cand_alt = curves_fn(stream_t.bel_alt, stream_t.c0, grid,
+                                 cfg.priors, d_points=cfg.d_points)
+            stacked = MomentCurves(
+                EL=jnp.stack([cand.EL, cand_alt.EL]),
+                VL=jnp.stack([cand.VL, cand_alt.VL]),
+            )
+            cand = mixture_moments(jnp.asarray([0.5, 0.5]), stacked)
+        return cand
+
+    return candidates
+
+
+def _step_dynamics(cfg: SimConfig, capacity, key, state: SimState):
+    """Steps 1–3 of one ``dt``-hour step for ONE cluster: deaths, scale-out
+    grants against ``capacity`` (a traced value — the fleet passes each
+    cluster's own), and conjugate belief updates.
+
+    Returns ``(state, util, failed, n_req_total, departed)`` with the slot
+    arrays updated and the metric counters untouched (the caller accumulates
+    them after admission).
+    """
+    alive_f = state.alive.astype(jnp.float32)
+
+    # 1. deaths ---------------------------------------------------------
+    ev = sample_step_events(key, state.params, state.cores, cfg.priors,
+                            cfg.dt, alive=state.alive)
+    deaths = jnp.minimum(ev.core_deaths.astype(jnp.float32), state.cores) * alive_f
+    exposure = state.cores * cfg.dt * alive_f
+    cores = state.cores - deaths
+    cores = jnp.where(ev.spont_death & state.alive, 0.0, cores)
+    alive = state.alive & (cores > 0.0)
+    departed = jnp.sum((state.alive & ~alive).astype(jnp.float32))
+    alive_f = alive.astype(jnp.float32)
+
+    # 2. scale-outs (only deployments still alive request) ---------------
+    req = ev.scaleout_cores.astype(jnp.float32) * alive_f
+    n_req = ev.n_scaleouts.astype(jnp.float32) * alive_f
+    util = jnp.sum(cores * alive_f)
+    grant = (util + jnp.cumsum(req)) <= capacity
+    cores = cores + jnp.where(grant, req, 0.0)
+    failed = jnp.sum(jnp.where(~grant, n_req, 0.0))
+    util = jnp.sum(cores * alive_f)
+
+    # 3. belief updates (requests are observed whether or not granted) ---
+    bel = update_on_events(
+        state.bel,
+        core_deaths=deaths,
+        exposure_core_hours=exposure,
+        n_scaleouts=n_req,
+        scaleout_cores=req,
+        alive_hours=cfg.dt * alive_f,
+        priors=cfg.priors,
+    )
+    state = state._replace(alive=alive, cores=cores, bel=bel)
+    return state, util, failed, jnp.sum(n_req), departed
+
+
+def _admit_place_fold(cfg: SimConfig, policy: PolicyParams, state: SimState,
+                      agg_el, agg_vl, util, cand: MomentCurves,
+                      stream_t: ArrivalStream, valid):
+    """Step 4 for ONE cluster: sequential admission of the (cluster-masked)
+    candidates against the maintained aggregate, slot placement, and the
+    incremental aggregate fold of *placed* arrivals.
+
+    Folds only arrivals that actually landed in a slot into the carried
+    aggregate — accepted-but-overflowed ones never became deployments (the
+    seed's per-step recompute likewise only ever saw placed slots).
+    """
+    res = admit_sequential(policy, agg_el, agg_vl, util, cand,
+                           stream_t.c0, valid)
+    state, placed_arrival = _place_arrivals(state, res.accept, stream_t, cfg)
+    placed_f = placed_arrival.astype(jnp.float32)
+    agg_el = agg_el + jnp.einsum("an,a->n", cand.EL, placed_f)
+    agg_vl = agg_vl + jnp.einsum("an,a->n", cand.VL, placed_f)
+    return state, agg_el, agg_vl, res.accept
+
+
 def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int,
              arrival_source: ArrivalSource | None = None):
     """Build the jitted simulator for a fixed policy *kind* (threshold/rho stay
@@ -330,92 +548,33 @@ def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int,
     n_grid = grid.shape[0] if needs_moments else 1
     k_refresh = cfg.agg_refresh_steps
     n_outer = cfg.n_steps // k_refresh
-    if cfg.use_kernel:
-        from ..kernels.moment_curves.ops import moment_curves_kernel
-
-        def curves_fn(bel, cores, grid_, priors, d_points):
-            flat_bel = jax.tree.map(lambda a: a.reshape(-1), bel)
-            out = moment_curves_kernel(flat_bel, cores.reshape(-1), grid_,
-                                       priors, d_points=d_points)
-            shape = cores.shape + (grid_.shape[0],)
-            return MomentCurves(out.EL.reshape(shape), out.VL.reshape(shape))
-    else:
-        curves_fn = moment_curves_fused
+    curves_fn = _make_curves_fn(cfg)
     aggregate_fn = _make_aggregate_fn(cfg, grid)
+    candidates_fn = _make_candidates_fn(cfg, grid, needs_moments, n_grid,
+                                        curves_fn)
 
     def step(policy: PolicyParams, carry, xs):
         state, agg_el, agg_vl = carry
         key, stream_t = xs
-        k_ev = key
-        alive_f = state.alive.astype(jnp.float32)
-
-        # 1. deaths ---------------------------------------------------------
-        ev = sample_step_events(k_ev, state.params, state.cores, cfg.priors,
-                                cfg.dt, alive=state.alive)
-        deaths = jnp.minimum(ev.core_deaths.astype(jnp.float32), state.cores) * alive_f
-        exposure = state.cores * cfg.dt * alive_f
-        cores = state.cores - deaths
-        cores = jnp.where(ev.spont_death & state.alive, 0.0, cores)
-        alive = state.alive & (cores > 0.0)
-        alive_f = alive.astype(jnp.float32)
-
-        # 2. scale-outs (only deployments still alive request) ---------------
-        req = ev.scaleout_cores.astype(jnp.float32) * alive_f
-        n_req = ev.n_scaleouts.astype(jnp.float32) * alive_f
-        util = jnp.sum(cores * alive_f)
-        grant = (util + jnp.cumsum(req)) <= cfg.capacity
-        cores = cores + jnp.where(grant, req, 0.0)
-        failed = jnp.sum(jnp.where(~grant, n_req, 0.0))
-        util = jnp.sum(cores * alive_f)
-
-        # 3. belief updates (requests are observed whether or not granted) ---
-        bel = update_on_events(
-            state.bel,
-            core_deaths=deaths,
-            exposure_core_hours=exposure,
-            n_scaleouts=n_req,
-            scaleout_cores=req,
-            alive_hours=cfg.dt * alive_f,
-            priors=cfg.priors,
-        )
+        state, util, failed, n_req_total, departed = _step_dynamics(
+            cfg, cfg.capacity, key, state)
 
         # 4. arrivals, admitted against the maintained aggregate -------------
         valid = jnp.arange(cfg.max_arrivals) < stream_t.n_arrivals
-        if needs_moments:
-            cand = curves_fn(stream_t.bel, stream_t.c0, grid, cfg.priors,
-                             d_points=cfg.d_points)
-            if cfg.prior_mode == MIX_UNLABELED:
-                cand_alt = curves_fn(stream_t.bel_alt, stream_t.c0, grid,
-                                     cfg.priors, d_points=cfg.d_points)
-                stacked = MomentCurves(
-                    EL=jnp.stack([cand.EL, cand_alt.EL]),
-                    VL=jnp.stack([cand.VL, cand_alt.VL]),
-                )
-                cand = mixture_moments(jnp.asarray([0.5, 0.5]), stacked)
-        else:
-            cand = MomentCurves(EL=jnp.zeros((cfg.max_arrivals, n_grid)),
-                                VL=jnp.zeros((cfg.max_arrivals, n_grid)))
+        cand = candidates_fn(stream_t)
+        state, agg_el, agg_vl, accept = _admit_place_fold(
+            cfg, policy, state, agg_el, agg_vl, util, cand, stream_t, valid)
 
-        res = admit_sequential(policy, agg_el, agg_vl, util, cand,
-                               stream_t.c0, valid)
-        state = state._replace(alive=alive, cores=cores, bel=bel)
-        state, placed_arrival = _place_arrivals(state, res.accept, stream_t, cfg)
-        # fold only arrivals that actually landed in a slot into the carried
-        # aggregate — accepted-but-overflowed ones never became deployments
-        # (the seed's per-step recompute likewise only ever saw placed slots)
-        placed_f = placed_arrival.astype(jnp.float32)
-        agg_el = agg_el + jnp.einsum("an,a->n", cand.EL, placed_f)
-        agg_vl = agg_vl + jnp.einsum("an,a->n", cand.VL, placed_f)
-
-        n_acc = jnp.sum(res.accept.astype(jnp.float32))
+        n_acc = jnp.sum(accept.astype(jnp.float32))
         n_rej = jnp.sum(valid.astype(jnp.float32)) - n_acc
         util_end = jnp.sum(state.cores * state.alive.astype(jnp.float32))
         state = state._replace(
             core_hours=state.core_hours + util_end * cfg.dt,
             fail_requests=state.fail_requests + failed,
-            total_requests=state.total_requests + jnp.sum(n_req),
+            total_requests=state.total_requests + n_req_total,
             arr_accepted=state.arr_accepted + n_acc,
             arr_rejected=state.arr_rejected + n_rej,
+            n_departed=state.n_departed + departed,
         )
         return (state, agg_el, agg_vl), (util_end, failed)
 
@@ -452,9 +611,231 @@ def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int,
             arrivals_accepted=state.arr_accepted,
             arrivals_rejected=state.arr_rejected,
             slot_overflow=state.slot_overflow,
+            n_departed=state.n_departed,
+            alive_end=jnp.sum(state.alive.astype(jnp.float32)),
             util_trace=util_trace.reshape(cfg.n_steps),
             fail_trace=fail_trace.reshape(cfg.n_steps),
         )
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Fleet mode: a leading cluster axis over the same step machinery.
+# ---------------------------------------------------------------------------
+
+
+def _cluster_step_keys(key: jax.Array, n_clusters: int) -> jax.Array:
+    """[C] per-cluster event keys for one step.
+
+    Cluster 0 keeps the undiverted per-step key, so a one-cluster fleet
+    reproduces ``make_run``'s event randomness key-for-key; clusters 1..C-1
+    fold their index in (independent chains, no cross-cluster correlation).
+    """
+    if n_clusters == 1:
+        return key[None]
+    return jnp.stack([key] + [jax.random.fold_in(key, c)
+                              for c in range(1, n_clusters)])
+
+
+def _check_fleet_policy_capacity(policy: PolicyParams, fcfg: FleetConfig):
+    """Fail fast on a mis-specified fleet policy: each cluster's ``decide``
+    admits against ``policy.capacity``, so a scalar fleet-*total* capacity
+    tiled to every cluster would let each cluster believe it owns the whole
+    fleet's budget — calibration would then return plausible-looking but
+    wildly over-optimistic thetas with no error. Skipped when the capacity
+    leaf is traced (the values are checked at the first concrete call)."""
+    cap = getattr(policy, "capacity", None)
+    if cap is None or isinstance(cap, jax.core.Tracer):
+        return
+    cap = np.asarray(cap)
+    target = np.asarray(fcfg.capacities, dtype=np.float64)
+    ok = (cap.ndim == 0 or cap.shape == target.shape) and np.allclose(
+        np.asarray(cap, np.float64), target, rtol=1e-5)
+    if not ok:
+        raise ValueError(
+            f"policy capacity {cap} does not match FleetConfig.capacities "
+            f"{fcfg.capacities}: each cluster admits against its OWN "
+            "capacity. Build fleet policies with core.policies.fleet_policy"
+            "(kind, capacities=fleet_cfg.capacities, ...); when tuning, pass "
+            "such a closure as calibrate(..., policy_fn=...).")
+
+
+def broadcast_policy(policy: PolicyParams, n_clusters: int) -> PolicyParams:
+    """Give every PolicyParams field a leading ``[C]`` cluster axis.
+
+    Scalar fields are tiled; fields already carrying the cluster axis (from
+    ``core.policies.fleet_policy``) pass through unchanged. Anything else is
+    a shape error — per-cluster parameters must be built deliberately.
+    """
+
+    def bc(x):
+        x = jnp.asarray(x)
+        if x.ndim == 0:
+            return jnp.broadcast_to(x, (n_clusters,))
+        if x.shape[0] == n_clusters and x.ndim == 1:
+            return x
+        raise ValueError(
+            f"policy field has shape {x.shape}; expected a scalar or a "
+            f"[{n_clusters}]-vector (one entry per cluster)")
+
+    return jax.tree.map(bc, policy)
+
+
+def make_fleet_run(fcfg: FleetConfig, horizon_grid: jax.Array,
+                   policy_kind: int, router=None,
+                   arrival_source: ArrivalSource | None = None):
+    """Build the jitted fleet simulator: route, then admit per cluster.
+
+    Returns ``run(key, policy, stream=None) -> FleetMetrics``. ``policy``
+    is normally a ``core.policies.fleet_policy`` (``[C]`` fields, per-cluster
+    capacities and thresholds); a plain scalar ``PolicyParams`` is tiled to
+    every cluster via ``broadcast_policy``, which is only meaningful for a
+    homogeneous fleet — ``run`` fails fast when the policy's capacity does
+    not match ``FleetConfig.capacities`` per cluster (a tiled fleet-total
+    would let every cluster admit against the whole fleet's budget).
+
+    Each step: per-cluster dynamics (deaths / scale-out grants against the
+    cluster's own capacity / belief updates, vmapped over the cluster axis
+    with independent key chains), one shared candidate-curve evaluation for
+    the step's fleet-wide arrivals, the ``router``'s cluster assignment from
+    the per-cluster maintained aggregates, then per-cluster
+    ``admit_sequential`` + slot placement + incremental aggregate fold on
+    each cluster's assigned arrivals. The blocked ``agg_refresh_steps``
+    refresh recomputes every cluster's aggregate from its own slot array
+    once per block. Arrivals the router maps to the sentinel ``C`` (the
+    threshold cascade's "no cluster would take it") are counted as
+    ``rejected_by_all`` and enter no cluster's admission scan.
+    """
+    from .routing import LeastUtilizedRouter
+
+    _validate_fleet_config(fcfg)
+    cfg = fcfg.base
+    n_c = fcfg.n_clusters
+    caps = jnp.asarray(fcfg.capacities, jnp.float32)
+    router = LeastUtilizedRouter() if router is None else router
+    source = PriorArrivalSource() if arrival_source is None else arrival_source
+    needs_moments = policy_kind != ZEROTH
+    grid = horizon_grid
+    n_grid = grid.shape[0] if needs_moments else 1
+    k_refresh = cfg.agg_refresh_steps
+    n_outer = cfg.n_steps // k_refresh
+    curves_fn = _make_curves_fn(cfg)
+    aggregate_fn = _make_aggregate_fn(cfg, grid)
+    candidates_fn = _make_candidates_fn(cfg, grid, needs_moments, n_grid,
+                                        curves_fn)
+
+    def fleet_step(policy: PolicyParams, carry, xs):
+        state, agg_el, agg_vl, rej_all = carry      # [C, ...] everywhere
+        key, stream_t = xs
+        keys_c = _cluster_step_keys(key, n_c)
+        state, util, failed, n_req_total, departed = jax.vmap(
+            lambda cap, k, st: _step_dynamics(cfg, cap, k, st))(
+                caps, keys_c, state)
+
+        valid = jnp.arange(cfg.max_arrivals) < stream_t.n_arrivals
+        cand = candidates_fn(stream_t)
+
+        from .routing import RouteContext
+
+        assign = router.route(
+            jax.random.fold_in(key, n_c),
+            RouteContext(cand=cand, c0=stream_t.c0, valid=valid,
+                         agg_el=agg_el, agg_vl=agg_vl, util=util,
+                         capacities=caps, policy=policy))
+        assign = jnp.clip(assign, 0, n_c)           # sentinel n_c = nowhere
+        cluster_mask = valid[None, :] & (
+            assign[None, :] == jnp.arange(n_c)[:, None])   # [C, A]
+        rej_all = rej_all + jnp.sum(
+            (valid & (assign == n_c)).astype(jnp.float32))
+
+        state, agg_el, agg_vl, accept = jax.vmap(
+            lambda pol_c, st_c, el_c, vl_c, u_c, valid_c: _admit_place_fold(
+                cfg, pol_c, st_c, el_c, vl_c, u_c, cand, stream_t, valid_c))(
+                    policy, state, agg_el, agg_vl, util, cluster_mask)
+
+        n_acc = jnp.sum(accept.astype(jnp.float32), axis=1)          # [C]
+        n_rej = jnp.sum(cluster_mask.astype(jnp.float32), axis=1) - n_acc
+        util_end = jnp.sum(
+            state.cores * state.alive.astype(jnp.float32), axis=1)   # [C]
+        state = state._replace(
+            core_hours=state.core_hours + util_end * cfg.dt,
+            fail_requests=state.fail_requests + failed,
+            total_requests=state.total_requests + n_req_total,
+            arr_accepted=state.arr_accepted + n_acc,
+            arr_rejected=state.arr_rejected + n_rej,
+            n_departed=state.n_departed + departed,
+        )
+        return (state, agg_el, agg_vl, rej_all), (util_end, failed)
+
+    def outer_block(policy: PolicyParams, carry, xs_block):
+        state, rej_all = carry
+        # full per-cluster refresh of the aggregates, once per block
+        if needs_moments:
+            agg_el, agg_vl = jax.vmap(aggregate_fn)(state.bel, state.cores,
+                                                    state.alive)
+        else:
+            agg_el = jnp.zeros((n_c, n_grid))
+            agg_vl = jnp.zeros((n_c, n_grid))
+        (state, _, _, rej_all), traces = jax.lax.scan(
+            functools.partial(fleet_step, policy),
+            (state, agg_el, agg_vl, rej_all), xs_block
+        )
+        return (state, rej_all), traces
+
+    @functools.partial(jax.jit, static_argnames=())
+    def _sim_run(key: jax.Array, policy: PolicyParams,
+                 stream: Optional[ArrivalStream] = None) -> FleetMetrics:
+        policy = broadcast_policy(policy, n_c)
+        k_stream, k_scan = jax.random.split(key)
+        if stream is None:
+            stream = source.stream(k_stream, cfg)
+        keys = jax.random.split(k_scan, cfg.n_steps)
+        state0 = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_c,) + x.shape), _init_state(cfg))
+        block = lambda x: x.reshape((n_outer, k_refresh) + x.shape[1:])
+        xs = jax.tree.map(block, (keys, stream))
+        (state, rej_all), (util_trace, fail_trace) = jax.lax.scan(
+            functools.partial(outer_block, policy),
+            (state0, jnp.zeros(())), xs
+        )
+        util_trace = util_trace.reshape(cfg.n_steps, n_c).T      # [C, T]
+        fail_trace = fail_trace.reshape(cfg.n_steps, n_c).T
+        per_cluster = RunMetrics(
+            utilization=state.core_hours / (cfg.horizon_hours * caps),
+            failure_rate=state.fail_requests
+            / jnp.maximum(state.total_requests, 1.0),
+            total_requests=state.total_requests,
+            failed_requests=state.fail_requests,
+            arrivals_accepted=state.arr_accepted,
+            arrivals_rejected=state.arr_rejected,
+            slot_overflow=state.slot_overflow,
+            n_departed=state.n_departed,
+            alive_end=jnp.sum(state.alive.astype(jnp.float32), axis=1),
+            util_trace=util_trace,
+            fail_trace=fail_trace,
+        )
+        tot_req = jnp.sum(state.total_requests)
+        tot_fail = jnp.sum(state.fail_requests)
+        return FleetMetrics(
+            utilization=jnp.sum(state.core_hours)
+            / (cfg.horizon_hours * jnp.sum(caps)),
+            failure_rate=tot_fail / jnp.maximum(tot_req, 1.0),
+            total_requests=tot_req,
+            failed_requests=tot_fail,
+            arrivals_accepted=jnp.sum(state.arr_accepted),
+            arrivals_rejected=jnp.sum(state.arr_rejected) + rej_all,
+            rejected_by_all=rej_all,
+            slot_overflow=jnp.sum(state.slot_overflow),
+            util_trace=jnp.sum(util_trace, axis=0),
+            fail_trace=jnp.sum(fail_trace, axis=0),
+            per_cluster=per_cluster,
+        )
+
+    def run(key: jax.Array, policy: PolicyParams,
+            stream: Optional[ArrivalStream] = None) -> FleetMetrics:
+        _check_fleet_policy_capacity(policy, fcfg)
+        return _sim_run(key, policy, stream)
 
     return run
 
@@ -467,9 +848,10 @@ def shard_batch_over_devices(batched, devices, axis: str,
     ``batched`` maps ``n_batch_args`` leading-axis batches (plus
     ``n_replicated_args`` trailing broadcast arguments) to a pytree with the
     same leading axis; the batches are split across devices, replicated args
-    go everywhere. Shared by ``run_batch`` (one batch arg: keys), the
-    trace-ensemble path (two: keys + a stream batch), and the
-    importance-sampling probe loop.
+    go everywhere. The batch size must divide the device count — callers
+    with ragged batches pad first (see ``run_keyed_batch``). Shared by
+    ``run_batch`` (one batch arg: keys), the trace-ensemble path (two: keys
+    + a stream batch), and the importance-sampling probe loop.
     """
     from jax.sharding import Mesh, PartitionSpec as P
 
@@ -489,16 +871,29 @@ _SHARDED_RUN_CACHE: "collections.OrderedDict" = collections.OrderedDict()
 _SHARDED_RUN_CACHE_MAX = 8
 
 
+def _pad_batch(args, n_batch: int, pad: int):
+    """Pad the leading axis of the first ``n_batch`` args by repeating their
+    last row ``pad`` times (trailing args are replicated, never padded)."""
+    if pad == 0:
+        return args
+    pad_fn = lambda x: jnp.concatenate(
+        [x, jnp.broadcast_to(x[-1:], (pad,) + x.shape[1:])], axis=0)
+    return tuple(jax.tree.map(pad_fn, a) for a in args[:n_batch]) \
+        + args[n_batch:]
+
+
 def run_keyed_batch(run_fn, keys: jax.Array, policy: PolicyParams,
                     *, streams: Optional[ArrivalStream] = None,
                     devices=None) -> RunMetrics:
     """Simulate an explicit ``[R, ...]`` batch of PRNG keys: vmap over runs,
     shard_map over devices.
 
-    With more than one local device and the batch divisible by the device
-    count, the key batch is sharded over a 1-d mesh and each device vmaps its
-    shard (pure data parallelism — runs never communicate). Falls back to a
-    plain vmap on a single device or when the batch does not divide evenly.
+    With more than one local device the key batch is sharded over a 1-d mesh
+    and each device vmaps its shard (pure data parallelism — runs never
+    communicate). A batch that does not divide the device count is **padded**
+    to the next multiple by repeating its last run (streams ride along), and
+    the padded lanes are sliced off before returning — so they never reach a
+    caller's metric reductions. Single-device falls back to a plain vmap.
     The compiled sharded wrapper is cached per (run_fn, devices) — the policy
     is a traced argument — so repeated calls do not re-trace.
 
@@ -524,9 +919,11 @@ def run_keyed_batch(run_fn, keys: jax.Array, policy: PolicyParams,
                            in_axes=(0, 0, None))
         args = (keys, streams, policy)
         n_batch = 2
-    if n_dev <= 1 or n_runs % n_dev != 0:
+    if n_dev <= 1:
         return batched(*args)
 
+    pad = (-n_runs) % n_dev
+    args = _pad_batch(args, n_batch, pad)
     cache_key = (run_fn, devices, n_batch)
     sharded = _SHARDED_RUN_CACHE.get(cache_key)
     if sharded is None:
@@ -538,7 +935,10 @@ def run_keyed_batch(run_fn, keys: jax.Array, policy: PolicyParams,
             _SHARDED_RUN_CACHE.popitem(last=False)
     else:
         _SHARDED_RUN_CACHE.move_to_end(cache_key)
-    return sharded(*args)
+    metrics = sharded(*args)
+    if pad:
+        metrics = jax.tree.map(lambda x: x[:n_runs], metrics)
+    return metrics
 
 
 def run_batch(run_fn, key: jax.Array, policy: PolicyParams, n_runs: int,

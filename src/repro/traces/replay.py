@@ -34,7 +34,9 @@ Information models (``cfg.prior_mode``) are all supported on replay:
         ``core.belief.pseudo_counts_from_observables`` and the existing
         conjugate updates. This models a provider who had previously
         watched exactly the history the trace records; ``n_pseudo_obs``
-        is ignored because the trace defines its own information content.
+        is ignored because the trace defines its own information content
+        (``_validate_config`` still requires it >= 1 under PSEUDO — the
+        sampled-observation footgun check cannot see the arrival source).
   * MIX_LABELED / MIX_UNLABELED (§7) — the submitted deployment is the
     trace row (belief as in PSEUDO); the alternative user type, which a
     bare trace cannot carry, is imputed as an independent draw from
@@ -62,7 +64,7 @@ from ..core.processes import (DeploymentParams, PopulationPriors,
                               sample_pseudo_observations)
 from ..sim.simulator import (GLOBAL, MIX_LABELED, MIX_UNLABELED, PSEUDO,
                              ArrivalSource, ArrivalStream, SimConfig,
-                             _validate_config)
+                             _validate_config, stream_config)
 from .schema import WorkloadTrace, has_latents, validate_trace
 
 PSEUDO_LATENT, PSEUDO_OBSERVED, PSEUDO_AUTO = "latent", "observed", "auto"
@@ -139,7 +141,13 @@ def trace_to_stream(trace: WorkloadTrace, cfg: SimConfig,
     ``key`` feeds the belief-side sampling of the PSEUDO-latent and §7
     modes (see the module docstring); GLOBAL and PSEUDO-observed replay is
     deterministic and ignores it.
+
+    ``cfg`` may be a ``FleetConfig``: the trace is scattered into ONE
+    fleet-wide stream (the fleet's base layout via ``stream_config``) and
+    arrivals are *routed* to clusters at simulation time by
+    ``make_fleet_run``'s router — a trace never pre-assigns clusters.
     """
+    cfg = stream_config(cfg)
     _validate_config(cfg)
     # the cumulative-rank scatter below assumes sorted valid arrivals; a
     # hand-built trace that skipped sorting would otherwise be corrupted
@@ -241,6 +249,8 @@ class TraceArrivalSource(ArrivalSource):
         Drops depend only on arrival placement, never on beliefs, so the
         count is taken under GLOBAL — skipping the pseudo-observation and
         §7 alt-type sampling the real information model would pay for.
+        ``cfg`` may be a ``FleetConfig`` (drops are a property of the
+        fleet-wide stream layout, before routing).
         """
-        return int(trace_to_stream(self.trace,
-                                   cfg._replace(prior_mode=GLOBAL))[1])
+        cfg = stream_config(cfg)._replace(prior_mode=GLOBAL)
+        return int(trace_to_stream(self.trace, cfg)[1])

@@ -35,7 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.policies import SECOND, make_policy
-from ..sim.simulator import ArrivalStream, shard_batch_over_devices
+from ..sim.simulator import (ArrivalStream, _pad_batch,
+                             shard_batch_over_devices)
 
 #: search-space coordinates per policy kind: SECOND tunes the Cantelli rho on
 #: a log10 grid (the feasible range spans ~4 decades); the threshold kinds
@@ -134,35 +135,42 @@ _EVAL_CACHE_MAX = 16
 
 
 def _theta_batch_fn(run_fn, kind: int, capacity: float, marginal: bool,
-                    has_streams: bool, devices, n_flat: int):
-    """Flat [T*R] (key, theta[, stream]) evaluator, device-sharded when the
-    flat batch divides the device count."""
-    cache_key = (run_fn, kind, float(capacity), marginal, has_streams,
-                 devices, n_flat % max(len(devices), 1) == 0)
+                    has_streams: bool, devices, policy_fn=None):
+    """Flat [T*R] (key, theta[, stream]) evaluator, device-sharded on a
+    multi-device host (ragged flat batches are padded by the caller).
+
+    ``policy_fn(theta) -> PolicyParams`` overrides the default scalar
+    ``make_policy`` construction — the fleet path passes a
+    ``core.policies.fleet_policy`` closure so every candidate theta becomes
+    a cluster-axis-broadcast policy inside the same flattened pass. Reuse
+    one function object across calls to keep the compiled-wrapper cache hot.
+    """
+    cache_key = (run_fn, kind, float(capacity), marginal, policy_fn,
+                 has_streams, devices)
     fn = _EVAL_CACHE.get(cache_key)
     if fn is not None:
         _EVAL_CACHE.move_to_end(cache_key)
         return fn
 
+    if policy_fn is None:
+        policy_fn = lambda theta: make_policy(
+            kind, threshold=theta, rho=theta, capacity=capacity,
+            marginal=marginal)
+
     if has_streams:
         def one(key, theta, stream):
-            pol = make_policy(kind, threshold=theta, rho=theta,
-                              capacity=capacity, marginal=marginal)
-            return run_fn(key, pol, stream)
+            return run_fn(key, policy_fn(theta), stream)
 
         batched = jax.vmap(one, in_axes=(0, 0, 0))
         n_batch = 3
     else:
         def one(key, theta):
-            pol = make_policy(kind, threshold=theta, rho=theta,
-                              capacity=capacity, marginal=marginal)
-            return run_fn(key, pol)
+            return run_fn(key, policy_fn(theta))
 
         batched = jax.vmap(one, in_axes=(0, 0))
         n_batch = 2
 
-    n_dev = len(devices)
-    if n_dev > 1 and n_flat % n_dev == 0:
+    if len(devices) > 1:
         fn = shard_batch_over_devices(batched, devices, "cal",
                                       n_batch_args=n_batch)
     else:
@@ -176,12 +184,19 @@ def _theta_batch_fn(run_fn, kind: int, capacity: float, marginal: bool,
 def eval_theta_grid(run_fn, kind: int, thetas, keys, *, capacity: float,
                     marginal: bool = False,
                     streams: Optional[ArrivalStream] = None,
-                    devices=None):
+                    devices=None, policy_fn=None):
     """Evaluate a whole [T] parameter grid over a shared [R] key batch in one
     device-sharded pass; returns ``RunMetrics`` with leading shape [T, R].
 
     Keys (and replay streams, when given) are shared across thetas — common
     random numbers — so grid points differ only through the policy.
+    ``policy_fn(theta)`` overrides how a candidate becomes a ``PolicyParams``
+    (see ``_theta_batch_fn``); with a fleet ``run_fn`` the returned pytree is
+    ``FleetMetrics`` — its fleet-level fields reshape the same way.
+
+    A flat [T*R] batch that does not divide the device count is padded to
+    the next multiple (repeating its last triple) and sliced afterwards —
+    same treatment as ``run_keyed_batch``, no silent single-device fallback.
     """
     thetas = jnp.asarray(thetas, jnp.float32)
     keys = jnp.asarray(keys)
@@ -195,9 +210,13 @@ def eval_theta_grid(run_fn, kind: int, thetas, keys, *, capacity: float,
     if streams is not None:
         tile = lambda x: jnp.tile(x, (t_n,) + (1,) * (x.ndim - 1))
         args = args + (jax.tree.map(tile, streams),)
+    pad = (-n_flat) % len(devices) if len(devices) > 1 else 0
+    args = _pad_batch(args, len(args), pad)
     fn = _theta_batch_fn(run_fn, kind, capacity, marginal, streams is not None,
-                         devices, n_flat)
+                         devices, policy_fn=policy_fn)
     metrics = fn(*args)
+    if pad:
+        metrics = jax.tree.map(lambda x: x[:n_flat], metrics)
     return jax.tree.map(lambda x: x.reshape((t_n, r_n) + x.shape[1:]), metrics)
 
 
@@ -217,6 +236,7 @@ def calibrate(
     streams: Optional[ArrivalStream] = None,
     devices=None,
     z: float = 1.96,
+    policy_fn=None,
 ) -> CalibrationResult:
     """SLA-constrained calibration of one policy's free parameter.
 
@@ -232,6 +252,11 @@ def calibrate(
     single stage — the oracle/property tests use this for determinism.
     ``streams`` calibrates against a fixed stacked [R] replay-stream batch
     instead of prior-sampled arrivals (per-scenario re-tuning).
+    ``policy_fn(theta)`` overrides candidate-policy construction — pass a
+    ``core.policies.fleet_policy`` closure (and the fleet's *total* capacity
+    as ``capacity``, so the search bounds scale correctly) to tune
+    heterogeneous per-cluster thresholds of a ``make_fleet_run`` simulator
+    in the same flattened device-sharded pass.
 
     The result is invariant to permutation of the candidate grid and to the
     device sharding of the flat batch: selection is by candidate *value* and
@@ -256,7 +281,7 @@ def calibrate(
             theta_vec = np.asarray([to_param(x, space) for x in xs])
         m = eval_theta_grid(run_fn, kind, theta_vec, keys, capacity=capacity,
                             marginal=marginal, streams=streams,
-                            devices=devices)
+                            devices=devices, policy_fn=policy_fn)
         fails = np.asarray(m.failed_requests)   # [T, R]
         reqs = np.asarray(m.total_requests)
         utils = np.asarray(m.utilization)

@@ -1,0 +1,360 @@
+"""Fleet simulator: routing, n_clusters=1 equivalence, conservation laws.
+
+Compile budget: the module builds a handful of jitted simulators (module
+fixtures) and every property test re-uses them — ZEROTH for the equivalence
+and cascade checks (cheap), one SECOND fleet for the moment-policy paths.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from repro.testing import given, settings, strategies as st
+
+from repro.core import (AZURE_PRIORS, SECOND, ZEROTH, fleet_policy,
+                        geometric_grid, make_policy)
+from repro.core.moments import MomentCurves
+from repro.sim import (FleetConfig, LeastUtilizedRouter, PowerOfTwoRouter,
+                       RandomRouter, RouteContext, ThresholdCascadeRouter,
+                       broadcast_policy, fleet_sla_failure_rate,
+                       fleet_utilization, make_config, make_fleet_config,
+                       make_fleet_run, make_run, stream_config)
+from repro.sim.simulator import _pad_batch
+
+CFG = make_config(capacity=500.0, arrival_rate=0.08, horizon_hours=30 * 24.0,
+                  dt=24.0, max_slots=96, max_arrivals=4, d_points=8)
+GRID = geometric_grid(24.0, 3 * 30 * 24.0, 12)
+CAPS2 = (300.0, 200.0)
+FLEET2 = FleetConfig(base=CFG, capacities=CAPS2)
+
+METRIC_FIELDS = ("utilization", "failure_rate", "total_requests",
+                 "failed_requests", "arrivals_accepted", "arrivals_rejected",
+                 "slot_overflow", "n_departed", "alive_end", "util_trace",
+                 "fail_trace")
+
+
+@pytest.fixture(scope="module")
+def single_zeroth():
+    return make_run(CFG, GRID, ZEROTH)
+
+
+@pytest.fixture(scope="module")
+def fleet1_zeroth():
+    fcfg = FleetConfig(base=CFG, capacities=(CFG.capacity,))
+    return make_fleet_run(fcfg, GRID, ZEROTH, router=LeastUtilizedRouter())
+
+
+@pytest.fixture(scope="module")
+def fleet2_second():
+    return make_fleet_run(FLEET2, GRID, SECOND, router=LeastUtilizedRouter())
+
+
+@pytest.fixture(scope="module")
+def fleet2_cascade():
+    return make_fleet_run(FLEET2, GRID, ZEROTH,
+                          router=ThresholdCascadeRouter())
+
+
+def _ctx(agg_el, util, caps, policy, c0, valid, agg_vl=None):
+    agg_el = jnp.asarray(agg_el, jnp.float32)
+    return RouteContext(
+        cand=MomentCurves(EL=jnp.zeros((len(c0), agg_el.shape[1])),
+                          VL=jnp.zeros((len(c0), agg_el.shape[1]))),
+        c0=jnp.asarray(c0, jnp.float32),
+        valid=jnp.asarray(valid, bool),
+        agg_el=agg_el,
+        agg_vl=agg_el * 0.0 if agg_vl is None else jnp.asarray(agg_vl),
+        util=jnp.asarray(util, jnp.float32),
+        capacities=jnp.asarray(caps, jnp.float32),
+        policy=policy,
+    )
+
+
+class TestRouters:
+    def test_random_in_range(self):
+        pol = broadcast_policy(
+            make_policy(ZEROTH, threshold=90.0, capacity=100.0), 3)
+        ctx = _ctx(jnp.zeros((3, 2)), [0.0, 0.0, 0.0], [100.0] * 3, pol,
+                   c0=[1.0] * 32, valid=[True] * 32)
+        assign = RandomRouter().route(jax.random.PRNGKey(0), ctx)
+        assert assign.shape == (32,)
+        assert bool(jnp.all((assign >= 0) & (assign < 3)))
+
+    def test_least_utilized_folds_same_step_arrivals(self):
+        pol = broadcast_policy(
+            make_policy(ZEROTH, threshold=90.0, capacity=100.0), 2)
+        ctx = _ctx(jnp.zeros((2, 2)), [10.0, 0.0], [100.0, 100.0], pol,
+                   c0=[5.0, 5.0, 5.0], valid=[True] * 3)
+        assign = LeastUtilizedRouter().route(jax.random.PRNGKey(0), ctx)
+        # 1st and 2nd go to the emptier cluster 1 (0 -> 5 cores); the 3rd
+        # sees a tie (10 vs 10) and argmin takes cluster 0 — the fold is
+        # what keeps a burst from dogpiling the pre-step argmin
+        np.testing.assert_array_equal(np.asarray(assign), [1, 1, 0])
+
+    def test_power_of_two_prefers_lower_curve_score(self):
+        pol = broadcast_policy(
+            make_policy(SECOND, rho=0.2, capacity=100.0), 2)
+        agg_el = jnp.stack([jnp.full((4,), 80.0), jnp.full((4,), 5.0)])
+        ctx = _ctx(agg_el, [80.0, 5.0], [100.0, 100.0], pol,
+                   c0=[1.0] * 256, valid=[True] * 256)
+        assign = np.asarray(
+            PowerOfTwoRouter().route(jax.random.PRNGKey(1), ctx))
+        # the two sampled choices are DISTINCT, so with C=2 every arrival
+        # compares both clusters and must take the lightly-loaded one
+        np.testing.assert_array_equal(assign, np.ones(256))
+
+    def test_power_of_two_single_cluster_degenerates(self):
+        pol = broadcast_policy(
+            make_policy(SECOND, rho=0.2, capacity=100.0), 1)
+        ctx = _ctx(jnp.zeros((1, 4)), [0.0], [100.0], pol,
+                   c0=[1.0] * 8, valid=[True] * 8)
+        assign = PowerOfTwoRouter().route(jax.random.PRNGKey(0), ctx)
+        np.testing.assert_array_equal(np.asarray(assign), np.zeros(8))
+
+    def test_cascade_first_accepting_cluster_and_sentinel(self):
+        pol = fleet_policy(ZEROTH, capacities=[100.0, 100.0],
+                           threshold=60.0)  # per-cluster thresholds 30/30
+        ctx = _ctx(jnp.zeros((2, 2)), [28.0, 0.0], [100.0, 100.0], pol,
+                   c0=[5.0, 40.0], valid=[True, True])
+        assign = np.asarray(
+            ThresholdCascadeRouter().route(jax.random.PRNGKey(0), ctx))
+        # c0=5: 28+5 > 30 at cluster 0, 0+5 < 30 at cluster 1 -> 1
+        # c0=40: exceeds both thresholds -> rejected-by-all sentinel 2
+        np.testing.assert_array_equal(assign, [1, 2])
+
+
+class TestOneClusterEquivalence:
+    def test_fleet_of_one_reproduces_single_cluster(self, single_zeroth,
+                                                    fleet1_zeroth):
+        pol = make_policy(ZEROTH, threshold=300.0, capacity=CFG.capacity)
+        for seed in (0, 3):
+            key = jax.random.PRNGKey(seed)
+            m1 = single_zeroth(key, pol)
+            mf = fleet1_zeroth(key, pol)
+            for f in METRIC_FIELDS:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(m1, f)),
+                    np.asarray(getattr(mf.per_cluster, f))[..., 0, :]
+                    if getattr(m1, f).ndim else
+                    np.asarray(getattr(mf.per_cluster, f))[0],
+                    err_msg=f)
+            # fleet-level reductions collapse to the same run
+            np.testing.assert_array_equal(np.asarray(m1.utilization),
+                                          np.asarray(mf.utilization))
+            assert float(mf.rejected_by_all) == 0.0
+
+    @pytest.mark.slow
+    def test_fleet_of_one_quick_preset(self):
+        """Acceptance: the one-cluster fleet reproduces the pre-refactor
+        single-cluster RunMetrics key-for-key at the quick preset."""
+        from benchmarks.common import SCALES, grid_for, sim_config
+
+        scale = SCALES["quick"]
+        cfg = sim_config(scale)
+        grid = grid_for(scale, cfg)
+        run1 = make_run(cfg, grid, SECOND)
+        frun = make_fleet_run(FleetConfig(base=cfg, capacities=(cfg.capacity,)),
+                              grid, SECOND, router=LeastUtilizedRouter())
+        key = jax.random.PRNGKey(0)
+        pol = make_policy(SECOND, rho=0.112, capacity=cfg.capacity)
+        fpol = fleet_policy(SECOND, capacities=(cfg.capacity,), rho=0.112)
+        m1 = run1(key, pol)
+        mf = frun(key, fpol)
+        for f in ("utilization", "failure_rate", "total_requests",
+                  "failed_requests", "arrivals_accepted", "arrivals_rejected",
+                  "slot_overflow", "n_departed", "alive_end"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(m1, f)),
+                np.asarray(getattr(mf.per_cluster, f))[0], err_msg=f)
+        np.testing.assert_array_equal(np.asarray(m1.util_trace),
+                                      np.asarray(mf.per_cluster.util_trace)[0])
+
+
+class TestFleetConservation:
+    """Satellite: conservation invariants, property-tested via repro.testing."""
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 1_000_000))
+    def test_no_cluster_exceeds_its_capacity(self, fleet2_second, seed):
+        pol = fleet_policy(SECOND, capacities=CAPS2, rho=0.5)
+        m = fleet2_second(jax.random.PRNGKey(seed), pol)
+        peaks = np.asarray(m.per_cluster.util_trace).max(axis=1)
+        assert (peaks <= np.asarray(CAPS2) + 1e-3).all(), peaks
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 1_000_000))
+    def test_alive_equals_admitted_minus_departed(self, fleet2_second, seed):
+        pol = fleet_policy(SECOND, capacities=CAPS2, rho=0.5)
+        m = fleet2_second(jax.random.PRNGKey(seed), pol).per_cluster
+        placed = np.asarray(m.arrivals_accepted) - np.asarray(m.slot_overflow)
+        np.testing.assert_array_equal(
+            np.asarray(m.alive_end), placed - np.asarray(m.n_departed))
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 1_000_000))
+    def test_fleet_metrics_reduce_per_cluster(self, fleet2_second, seed):
+        pol = fleet_policy(SECOND, capacities=CAPS2, rho=0.5)
+        m = fleet2_second(jax.random.PRNGKey(seed), pol)
+        pc = m.per_cluster
+        np.testing.assert_allclose(
+            float(m.utilization),
+            fleet_utilization(np.asarray(pc.utilization), CAPS2), rtol=1e-6)
+        np.testing.assert_array_equal(
+            np.asarray(m.failed_requests),
+            np.asarray(pc.failed_requests).sum())
+        np.testing.assert_array_equal(
+            np.asarray(m.total_requests),
+            np.asarray(pc.total_requests).sum())
+        assert float(m.failure_rate) == pytest.approx(fleet_sla_failure_rate(
+            np.asarray(pc.failed_requests)[None],
+            np.asarray(pc.total_requests)[None]))
+        np.testing.assert_array_equal(
+            np.asarray(m.arrivals_rejected),
+            np.asarray(pc.arrivals_rejected).sum()
+            + np.asarray(m.rejected_by_all))
+        np.testing.assert_allclose(
+            np.asarray(m.util_trace),
+            np.asarray(pc.util_trace).sum(axis=0), rtol=1e-6)
+
+    def test_cascade_rejected_by_all_accounting(self, fleet2_cascade):
+        # a tight fleet threshold forces cascade rejections; every valid
+        # arrival is either admitted somewhere, rejected by its target
+        # cluster, or rejected-by-all — nothing is lost
+        pol = fleet_policy(ZEROTH, capacities=CAPS2, threshold=20.0)
+        m = fleet2_cascade(jax.random.PRNGKey(2), pol)
+        assert float(m.rejected_by_all) > 0.0
+        total_seen = (float(m.arrivals_accepted)
+                      + float(m.arrivals_rejected))
+        pc = m.per_cluster
+        assert total_seen == pytest.approx(
+            float(np.asarray(pc.arrivals_accepted).sum())
+            + float(np.asarray(pc.arrivals_rejected).sum())
+            + float(m.rejected_by_all))
+
+
+class TestFleetReplay:
+    def test_trace_replays_into_fleet_routed(self, fleet2_second):
+        """A trace replays into the fleet as ONE fleet-wide stream whose
+        arrivals the router then spreads over clusters."""
+        from repro.traces import TraceSpec, synthesize_scenario, trace_to_stream
+
+        spec = TraceSpec(horizon_hours=CFG.horizon_hours,
+                         arrival_rate=CFG.arrival_rate * 4,
+                         max_deployments=256, max_events=8,
+                         priors=AZURE_PRIORS)
+        trace = synthesize_scenario(jax.random.PRNGKey(5), "baseline", spec)
+        stream, n_dropped = trace_to_stream(trace, FLEET2)
+        assert stream.c0.shape == (CFG.n_steps, CFG.max_arrivals)
+        pol = fleet_policy(SECOND, capacities=CAPS2, rho=0.5)
+        m = fleet2_second(jax.random.PRNGKey(0), pol, stream)
+        acc = np.asarray(m.per_cluster.arrivals_accepted)
+        assert acc.sum() > 0
+        # least-utilized routing spreads the trace over both clusters
+        assert (acc > 0).sum() == 2, acc
+        peaks = np.asarray(m.per_cluster.util_trace).max(axis=1)
+        assert (peaks <= np.asarray(CAPS2) + 1e-3).all()
+
+    def test_stream_config_reduces_fleet(self):
+        sc = stream_config(FLEET2)
+        assert sc.capacity == pytest.approx(sum(CAPS2))
+        assert sc.max_arrivals == CFG.max_arrivals
+        assert stream_config(CFG) is CFG
+
+
+class TestConfigValidation:
+    """Satellite: the PSEUDO/n_pseudo_obs footgun fails fast."""
+
+    def test_pseudo_with_zero_obs_rejected(self):
+        with pytest.raises(ValueError, match="degenerates to"):
+            make_config(prior_mode="pseudo", n_pseudo_obs=0)
+
+    def test_negative_pseudo_obs_rejected(self):
+        with pytest.raises(ValueError, match="n_pseudo_obs"):
+            make_config(n_pseudo_obs=-1)
+
+    def test_mixture_modes_with_zero_obs_rejected(self):
+        # §7 mixtures with 0 pseudo observations leave both components at
+        # the population prior — the same silent GLOBAL degeneration
+        for mode in ("labeled", "unlabeled"):
+            with pytest.raises(ValueError, match="degenerates to"):
+                make_config(prior_mode=mode, n_pseudo_obs=0)
+
+    def test_valid_pseudo_accepted(self):
+        cfg = make_config(prior_mode="pseudo", n_pseudo_obs=5)
+        assert cfg.n_pseudo_obs == 5
+
+    def test_global_with_zero_obs_still_fine(self):
+        assert make_config(n_pseudo_obs=0).prior_mode == "global"
+
+    def test_fleet_config_rejects_bad_capacities(self):
+        with pytest.raises(ValueError, match="capacities"):
+            make_fleet_config(())
+        with pytest.raises(ValueError, match="positive"):
+            make_fleet_config((100.0, -1.0))
+
+    def test_broadcast_policy_shape_checked(self):
+        pol = fleet_policy(ZEROTH, capacities=(1.0, 2.0, 3.0))
+        with pytest.raises(ValueError, match="per cluster"):
+            broadcast_policy(pol, 2)
+
+    def test_fleet_total_capacity_policy_fails_fast(self, fleet2_second):
+        """A scalar fleet-TOTAL capacity tiled per cluster would let every
+        cluster admit against the whole fleet's budget — run() rejects it."""
+        bad = make_policy(SECOND, rho=0.5, capacity=sum(CAPS2))
+        with pytest.raises(ValueError, match="FleetConfig.capacities"):
+            fleet2_second(jax.random.PRNGKey(0), bad)
+
+
+class TestBatchPadding:
+    """Satellite: ragged batches pad to the device multiple (and the padded
+    lanes never reach callers)."""
+
+    def test_pad_batch_repeats_last_row(self):
+        keys = jnp.arange(10).reshape(5, 2)
+        policy = {"replicated": jnp.zeros(3)}
+        padded = _pad_batch((keys, policy), 1, 3)
+        assert padded[0].shape == (8, 2)
+        np.testing.assert_array_equal(np.asarray(padded[0][:5]),
+                                      np.asarray(keys))
+        for row in np.asarray(padded[0][5:]):
+            np.testing.assert_array_equal(row, np.asarray(keys[-1]))
+        assert padded[1] is policy
+
+    def test_pad_batch_noop_when_aligned(self):
+        keys = jnp.arange(8).reshape(4, 2)
+        args = (keys, "policy")
+        assert _pad_batch(args, 1, 0) is args
+
+    def test_sharded_ragged_batch_matches_vmap_on_virtual_devices(self):
+        """Regression: a key batch that does not divide the device count used
+        to silently fall back to single-device vmap; now it pads, shards,
+        and slices — with identical metrics."""
+        import os
+        import subprocess
+        import sys
+
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                         "src")
+        out = subprocess.run([sys.executable, "-c", """
+import jax, numpy as np
+from repro.core import ZEROTH, geometric_grid, make_policy
+from repro.sim import make_config, make_run, run_keyed_batch
+
+cfg = make_config(capacity=300.0, arrival_rate=0.1, horizon_hours=10*24.0,
+                  dt=24.0, max_slots=48, max_arrivals=4, d_points=8)
+grid = geometric_grid(24.0, 30*24.0, 8)
+run = make_run(cfg, grid, ZEROTH)
+pol = make_policy(ZEROTH, threshold=200.0, capacity=cfg.capacity)
+keys = jax.random.split(jax.random.PRNGKey(0), 6)   # 6 % 8 != 0 -> pads to 8
+assert len(jax.devices()) == 8
+m_shard = run_keyed_batch(run, keys, pol)
+m_vmap = run_keyed_batch(run, keys, pol, devices=jax.devices()[:1])
+assert m_shard.utilization.shape == (6,), m_shard.utilization.shape
+np.testing.assert_allclose(np.asarray(m_shard.utilization),
+                           np.asarray(m_vmap.utilization), rtol=1e-6)
+np.testing.assert_array_equal(np.asarray(m_shard.failed_requests),
+                              np.asarray(m_vmap.failed_requests))
+print('OK')
+"""], env=env, capture_output=True, text=True, timeout=600)
+        assert out.returncode == 0, f"stdout:{out.stdout}\nstderr:{out.stderr}"

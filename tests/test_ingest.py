@@ -62,9 +62,13 @@ class TestFixtureRoundtrip:
         horizon = float(np.asarray(trace.horizon_hours))
         dt = 24.0
         n_steps = int(horizon // dt)
+        # n_pseudo_obs is ignored by the observed path (the trace's logged
+        # history defines the information content); it must be >= 1 only to
+        # satisfy the PSEUDO/0 footgun validation in _validate_config
         cfg = make_config(capacity=200.0, arrival_rate=0.05,
                           horizon_hours=n_steps * dt, dt=dt, max_slots=64,
-                          max_arrivals=8, d_points=8, prior_mode=PSEUDO)
+                          max_arrivals=8, d_points=8, prior_mode=PSEUDO,
+                          n_pseudo_obs=1)
         src = TraceArrivalSource(trace)
         assert src.pseudo_source == "observed"
         grid = geometric_grid(dt, 3 * horizon, 8)

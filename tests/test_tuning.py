@@ -66,6 +66,25 @@ class TestCalibrationProperties:
         assert r1.sla_fail == pytest.approx(r2.sla_fail, abs=1e-12)
         assert r1.utilization == pytest.approx(r2.utilization, rel=1e-6)
 
+    def test_policy_fn_reproduces_default_construction(self, sim_cache):
+        """The policy_fn hook (the fleet calibration path) with a closure
+        equivalent to the default scalar make_policy yields identical
+        metrics — same keys, same thetas, same simulator."""
+        from repro.core import make_policy
+        from repro.tuning import eval_theta_grid
+
+        cap = sim_cache.cfg.capacity
+        thetas = list(LADDERS[ZEROTH])[:4]
+        m_default = eval_theta_grid(sim_cache.run(ZEROTH), ZEROTH, thetas,
+                                    sim_cache.keys, capacity=cap)
+        pf = lambda th: make_policy(ZEROTH, threshold=th, rho=th, capacity=cap)
+        m_hook = eval_theta_grid(sim_cache.run(ZEROTH), ZEROTH, thetas,
+                                 sim_cache.keys, capacity=cap, policy_fn=pf)
+        np.testing.assert_array_equal(np.asarray(m_default.failed_requests),
+                                      np.asarray(m_hook.failed_requests))
+        np.testing.assert_array_equal(np.asarray(m_default.utilization),
+                                      np.asarray(m_hook.utilization))
+
     @pytest.mark.parametrize("kind", KINDS, ids=["zeroth", "first", "second"])
     def test_calibrate_invariant_to_key_order(self, sim_cache, kind):
         """Runs are exchangeable: permuting the key batch permutes per-run
@@ -368,6 +387,15 @@ assert len(jax.devices()) == 8
 assert r_multi.theta == r_single.theta, (r_multi.theta, r_single.theta)
 np.testing.assert_allclose(r_multi.sla_fail, r_single.sla_fail, atol=1e-12)
 np.testing.assert_allclose(r_multi.utilization, r_single.utilization,
+                           rtol=1e-6)
+# ragged flat batch (3 thetas x 7 keys = 21 on 8 devices): padded and
+# sliced, never silently un-sharded — must still match single-device
+r_rag_m = calibrate(run, ZEROTH, keys[:7], capacity=cfg.capacity, tau=5e-3,
+                    thetas=thetas[:3], devices=jax.devices())
+r_rag_s = calibrate(run, ZEROTH, keys[:7], capacity=cfg.capacity, tau=5e-3,
+                    thetas=thetas[:3], devices=jax.devices()[:1])
+assert r_rag_m.theta == r_rag_s.theta, (r_rag_m.theta, r_rag_s.theta)
+np.testing.assert_allclose(r_rag_m.utilization, r_rag_s.utilization,
                            rtol=1e-6)
 print('OK', r_multi.theta)
 """], env=env, capture_output=True, text=True, timeout=900)
