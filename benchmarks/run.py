@@ -24,8 +24,8 @@ import sys
 import time
 
 from . import (ablation_marginal, fig1_priors, fig2_pricing, fleet_bench,
-               kernels_bench, roofline, scenarios, table2_policies,
-               tuning_bench)
+               kernels_bench, roofline, scenarios, serve_bench,
+               table2_policies, tuning_bench)
 
 MODULES = {
     "kernels": kernels_bench,
@@ -37,6 +37,7 @@ MODULES = {
     "scenarios": scenarios,
     "fleet": fleet_bench,
     "tuning": tuning_bench,
+    "serve": serve_bench,
 }
 
 

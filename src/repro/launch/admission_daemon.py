@@ -1,33 +1,37 @@
-"""The integration point: the paper's admission controller gating a TPU
-cluster's job queue.
+"""The live integration point: the paper's admission controller running as a
+long-lived service gating a TPU cluster's job queue.
 
 Each *deployment* is an elastic model-serving/training job (one of the 10
 assigned architectures); its "cores" are accelerator chips that scale out
-with load following the paper's processes (fitted per arch family from the
-job's own telemetry via the conjugate belief). The daemon holds a slot table
-of admitted jobs, re-evaluates the aggregate moment curves on every arrival,
-and admits iff the second-moment (Cantelli) condition keeps
-Pr(sum of chip demand > cluster capacity) under the SLA — i.e. the paper's
-Corollary 1 applied to a model-serving fleet.
+with load following the paper's processes. The daemon is a thin driver of
+``serve.admission.OnlineAdmissionEngine``: one device-resident slot table +
+maintained aggregate moment curves, advanced ``dt`` hours per tick, with
+every arriving job submitted through the micro-batching front-end and
+admitted iff the configured policy (default: the second-moment / Cantelli
+condition of Corollary 1) keeps Pr(chip demand > capacity) under the SLA.
+
+Default thresholds are the **tuned operating points** recorded in the
+committed ``BENCH_quick.json`` calibration rows (rescaled to the daemon's
+capacity); the legacy hand-picked constants remain only as a warned
+fallback when no row exists.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.admission_daemon --hours 2000 \
-      --capacity 4096 [--policy second|first|zeroth]
+      --capacity 4096 [--policy second|first|zeroth] [--fleet 2048,2048] \
+      [--param RHO_OR_THRESHOLD] [--micro-batch 8]
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..core import (AZURE_PRIORS, FIRST, SECOND, ZEROTH, belief_from_prior,
-                    geometric_grid, make_policy)
-from ..core.belief import observe_initial_size
-from ..core.moments import moment_curves
-from ..core.policies import admit_sequential
-from ..models.registry import ARCH_NAMES, get_config
+from ..core import AZURE_PRIORS, FIRST, SECOND, ZEROTH, geometric_grid, \
+    make_policy
+from ..core.policies import fleet_policy
+from ..models.registry import ARCH_NAMES
 
 #: chips per replica of each servable arch (model-parallel footprint at bf16)
 CHIPS_PER_REPLICA = {
@@ -39,44 +43,114 @@ CHIPS_PER_REPLICA = {
 POLICY_KINDS = {"zeroth": ZEROTH, "first": FIRST, "second": SECOND}
 
 
+def build_engine(args):
+    """CLI args -> (engine, stream, keys): the configured online engine plus
+    the synthetic arrival stream and per-tick event keys driving it."""
+    from ..sim import (FleetConfig, SimConfig, draw_arrival_stream,
+                       stream_config)
+    from ..serve import OnlineAdmissionEngine, default_policy_param
+
+    kind_name = args.policy
+    kind = POLICY_KINDS[kind_name]
+    base = SimConfig(capacity=args.capacity, arrival_rate=args.arrival_rate,
+                     horizon_hours=args.hours, dt=args.dt,
+                     max_slots=args.max_slots, max_arrivals=args.micro_batch,
+                     priors=AZURE_PRIORS)
+    grid = geometric_grid(args.dt, args.hours * 3, 32)
+
+    param = args.param
+    if param is None:
+        param = default_policy_param(kind_name, args.capacity,
+                                     scale_name=args.scale)
+    if args.fleet:
+        caps = tuple(float(c) for c in args.fleet.split(","))
+        if abs(sum(caps) - args.capacity) > 1e-6:
+            base = base._replace(capacity=float(sum(caps)))
+        cfg = FleetConfig(base=base, capacities=caps)
+        pol = fleet_policy(kind, capacities=caps, threshold=param, rho=param)
+    else:
+        cfg = base
+        pol = make_policy(kind, threshold=param, rho=param,
+                          capacity=base.capacity)
+
+    engine = OnlineAdmissionEngine(cfg, grid, kind, pol,
+                                   micro_batch=args.micro_batch,
+                                   scale=args.scale)
+    key = jax.random.PRNGKey(args.seed)
+    k_stream, k_scan = jax.random.split(key)
+    stream = draw_arrival_stream(k_stream, stream_config(cfg))
+    keys = jax.random.split(k_scan, base.n_steps)
+    return engine, stream, keys, param
+
+
+def serve_loop(engine, stream, keys, *, log_every: int = 0) -> dict:
+    """Drive the engine tick-by-tick: dynamics, then this window's arrivals
+    through the micro-batching submit/flush front-end. Returns summary
+    counters (the engine itself holds the metrics)."""
+    from ..serve import Arrival
+
+    n_steps = keys.shape[0]
+    max_a = int(np.asarray(stream.c0.shape[1]))
+    n_arr = np.asarray(stream.n_arrivals)
+    admitted = 0
+    t0 = time.time()
+    for t in range(n_steps):
+        engine.tick(keys[t])
+        futs = [engine.submit(Arrival.from_stream(stream, t, a))
+                for a in range(min(int(n_arr[t]), max_a))]
+        engine.flush()
+        admitted += sum(f.result() for f in futs)
+        if log_every and (t + 1) % log_every == 0:
+            m = engine.metrics()
+            print(f"  t={t + 1}/{n_steps} util={float(m.utilization):.3f} "
+                  f"admitted={admitted}/{engine.decisions}")
+    return {"admitted": admitted, "decisions": engine.decisions,
+            "seconds": time.time() - t0}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--capacity", type=float, default=4096.0)
     ap.add_argument("--hours", type=float, default=2000.0)
     ap.add_argument("--dt", type=float, default=6.0)
     ap.add_argument("--arrival-rate", type=float, default=0.2)
+    ap.add_argument("--max-slots", type=int, default=512)
+    ap.add_argument("--micro-batch", type=int, default=8)
     ap.add_argument("--policy", default="second", choices=POLICY_KINDS)
     ap.add_argument("--param", type=float, default=None,
-                    help="threshold (zeroth/first, chips) or rho (second)")
+                    help="threshold (zeroth/first, chips) or rho (second); "
+                         "default: tuned operating point from BENCH_<scale>")
+    ap.add_argument("--fleet", default=None, metavar="C1,C2,...",
+                    help="serve a fleet of clusters with these capacities "
+                         "(overrides --capacity with their sum)")
+    ap.add_argument("--scale", default="quick",
+                    help="BENCH_<scale>.json supplying tuned operating "
+                         "points and the measured agg-refresh K-curve")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=0)
     args = ap.parse_args()
 
-    from ..sim import SimConfig, make_run
-    kind = POLICY_KINDS[args.policy]
-    param = args.param
-    if param is None:
-        param = 0.15 if kind == SECOND else 0.7 * args.capacity
-    cfg = SimConfig(capacity=args.capacity, arrival_rate=args.arrival_rate,
-                    horizon_hours=args.hours, dt=args.dt, max_slots=512,
-                    max_arrivals=4, priors=AZURE_PRIORS)
-    grid = geometric_grid(args.dt, args.hours * 3, 32)
-    pol = make_policy(kind, threshold=param, rho=param,
-                      capacity=args.capacity)
-    run = make_run(cfg, grid, kind)
-    m = run(jax.random.PRNGKey(args.seed), pol)
-
+    engine, stream, keys, param = build_engine(args)
+    mode = f"fleet[{args.fleet}]" if args.fleet else "single"
+    print(f"[admission-daemon] policy={args.policy} param={param:g} "
+          f"capacity={args.capacity:.0f} chips {mode} "
+          f"micro_batch={engine.width} agg_refresh_K={engine.k_refresh}")
     rng = np.random.default_rng(args.seed)
     arch_mix = rng.choice(len(ARCH_NAMES), size=8)
-    print(f"[admission-daemon] policy={args.policy} param={param:g} "
-          f"capacity={args.capacity:.0f} chips")
     print(f"  sample of admitted job types: "
           f"{[ARCH_NAMES[i] for i in arch_mix]}")
     print(f"  chips/replica table: {CHIPS_PER_REPLICA}")
+
+    summary = serve_loop(engine, stream, keys, log_every=args.log_every)
+    m = engine.metrics()
+    rate = summary["decisions"] / max(summary["seconds"], 1e-9)
     print(f"  utilization={float(m.utilization):.3f} "
           f"scaleout_failures={int(m.failed_requests)}/"
           f"{int(m.total_requests)} "
           f"admitted={int(m.arrivals_accepted)} "
           f"rejected={int(m.arrivals_rejected)}")
+    print(f"  served {summary['decisions']} admission decisions in "
+          f"{summary['seconds']:.1f}s ({rate:.1f} decisions/s)")
 
 
 if __name__ == "__main__":

@@ -47,15 +47,11 @@ def main():
     for r in reqs:
         engine.submit(r)
     t0 = time.time()
-    tokens = 0
-    steps = 0
-    while engine.waiting or engine.n_active:
-        tokens += engine.step()
-        steps += 1
+    done = engine.run_until_drained()
     dt = time.time() - t0
-    done = sum(r.done for r in reqs)
-    print(f"[serve] {done}/{len(reqs)} requests, {tokens} tokens in "
-          f"{steps} steps, {dt:.1f}s ({tokens / max(dt, 1e-9):.1f} tok/s)")
+    tokens = sum(len(r.out_tokens) for r in done)
+    print(f"[serve] {len(done)}/{len(reqs)} requests, {tokens} tokens in "
+          f"{dt:.1f}s ({tokens / max(dt, 1e-9):.1f} tok/s)")
     for r in reqs[:3]:
         print(f"  req{r.rid}: prompt={r.prompt.tolist()} -> "
               f"{r.out_tokens[:8]}...")

@@ -1,0 +1,14 @@
+"""Online serving layer: the continuous-batching LM engine (``engine``) and
+the live micro-batched admission service built on the shared admission core
+(``admission``)."""
+from .admission import (Arrival, ExternalEvents, OnlineAdmissionEngine,
+                        OperatingPoint, default_policy_param,
+                        format_operating_derived, load_operating_point,
+                        operating_row_name)
+from .engine import Request, ServeEngine
+
+__all__ = [
+    "Arrival", "ExternalEvents", "OnlineAdmissionEngine", "OperatingPoint",
+    "default_policy_param", "format_operating_derived",
+    "load_operating_point", "operating_row_name", "Request", "ServeEngine",
+]

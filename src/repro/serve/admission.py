@@ -1,0 +1,569 @@
+"""Online admission service: the simulator's admission core, served live.
+
+The paper's provider "has to continuously decide" admission as workloads
+arrive — this module is that decision loop as a long-lived engine rather
+than an offline ``lax.scan``:
+
+  * ``OnlineAdmissionEngine`` holds one device-resident ``CoreState`` (slot
+    table + beliefs + maintained aggregate moment curves) and advances it
+    with individually **jitted, buffer-donating** steps built from the same
+    ``sim.core.make_admission_core`` functions the simulators scan. Because
+    the functions are shared — not re-implemented — feeding the engine the
+    exact event/arrival sequence drawn by ``make_run`` reproduces the same
+    admit/reject decisions and final metrics bit-for-bit (asserted in
+    ``tests/test_online_admission.py``).
+  * A **micro-batching front-end**: concurrent ``submit()`` calls enqueue
+    arrival tickets (plain numpy, no device work on the caller's thread) and
+    receive futures; each ``flush()`` coalesces the queue into fixed-width
+    decision batches, so a burst of concurrent requests costs one device
+    step per ``micro_batch`` of them instead of one aggregate recompute per
+    request (the ``naive=True`` ablation path, kept for
+    ``benchmarks/serve_bench.py`` to measure against).
+  * **Event ingestion between steps**: ``tick()`` advances cluster dynamics
+    one ``dt``-hour window — either simulated from the fitted processes
+    (``tick(key)``, the benchmark/daemon regime) or applied from *observed*
+    departures and scale-out requests (``tick(events=...)``, the production
+    regime) — and refreshes the aggregate curves on the blocked
+    ``agg_refresh_steps`` schedule, selected from the measured K-curve via
+    ``tuning.pick_agg_refresh`` when a scale name is given.
+
+Fleet configurations run the same engine with a leading ``[C]`` cluster
+axis and a ``sim.routing.Router`` assigning each micro-batch lane to a
+cluster before per-cluster admission, mirroring ``make_fleet_run`` exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import threading
+import warnings
+from concurrent.futures import Future
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.belief import belief_from_prior, observe_initial_size
+from ..core.policies import PolicyParams
+from ..core.processes import DeploymentParams, sample_params
+from ..sim.core import (ArrivalStream, CoreState, FleetConfig, SimConfig,
+                        StepOutcome, make_admission_core)
+from ..sim.simulator import (_accumulate_step, _cluster_step_keys,
+                             _fleet_metrics, _run_metrics, broadcast_policy)
+
+_REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One admission request: the per-arrival lane of an ``ArrivalStream``.
+
+    ``params`` are the arrival's true process parameters — used only to
+    *simulate* the deployment's future dynamics (benchmarks, the daemon's
+    synthetic load); a production deployment's real events arrive through
+    ``tick(events=...)`` instead and ``params`` is dead weight there.
+    """
+
+    c0: float
+    bel: object                    # GammaBelief scalars (provider's prior)
+    bel_alt: object                # second mixture component (§7 unlabeled)
+    params: object                 # DeploymentParams scalars
+
+    @staticmethod
+    def from_stream(stream: ArrivalStream, t: int, a: int) -> "Arrival":
+        pick = lambda x: np.asarray(x[t, a])
+        return Arrival(c0=float(pick(stream.c0)),
+                       bel=jax.tree.map(pick, stream.bel),
+                       bel_alt=jax.tree.map(pick, stream.bel_alt),
+                       params=jax.tree.map(pick, stream.params))
+
+    @staticmethod
+    def draw(key: jax.Array, cfg: SimConfig) -> "Arrival":
+        """Sample one arrival from the population priors (ad-hoc load)."""
+        kp, kc = jax.random.split(key)
+        params = sample_params(kp, cfg.priors, ())
+        c0 = float(1 + jax.random.poisson(kc, params.sig))
+        bel = observe_initial_size(belief_from_prior(cfg.priors, ()),
+                                   jnp.asarray(c0))
+        return Arrival(c0=c0, bel=jax.tree.map(np.asarray, bel),
+                       bel_alt=jax.tree.map(np.asarray, bel),
+                       params=jax.tree.map(np.asarray, params))
+
+
+class ExternalEvents(NamedTuple):
+    """Observed cluster events for one ``dt``-hour window (production
+    ingestion path — replaces the fitted processes' simulated draw).
+
+    All arrays are per-slot ``[S]`` (``[C, S]`` for fleets): ``core_deaths``
+    cores lost per deployment, ``spont_death`` whole-deployment shutdowns,
+    and the window's scale-out demand (``scaleout_cores`` cores over
+    ``n_scaleouts`` requests; grants are decided against capacity in slot
+    order, exactly as the simulated path does).
+    """
+
+    core_deaths: jax.Array
+    spont_death: jax.Array
+    scaleout_cores: jax.Array
+    n_scaleouts: jax.Array
+
+
+class OnlineAdmissionEngine:
+    """Long-lived micro-batched admission engine over one ``AdmissionCore``.
+
+    Protocol (one ``dt``-hour window per ``tick``, decisions in between)::
+
+        eng = OnlineAdmissionEngine(cfg, grid, SECOND, policy)
+        fut = eng.submit(Arrival.draw(key, cfg))   # any thread, any time
+        eng.tick(step_key)                         # dynamics + agg refresh
+        eng.flush()                                # decide pending batch
+        fut.result()                               # -> bool (admitted?)
+        ...
+        eng.metrics()                              # RunMetrics so far
+
+    The slot/belief/aggregate state lives on device as one ``CoreState``
+    pytree and is **donated** through every jitted step, so a tick or a
+    micro-batch decision never allocates a second copy of the slot table.
+    ``cfg`` may be a ``SimConfig`` (single cluster) or ``FleetConfig``
+    (leading ``[C]`` axis + routing). ``naive=True`` selects the ablation
+    front-end: one full aggregate recompute + width-1 decision per request
+    (what admission costs without the maintained incremental aggregate).
+    """
+
+    def __init__(self, cfg, grid, policy_kind: int, policy: PolicyParams, *,
+                 router=None, micro_batch: Optional[int] = None,
+                 naive: bool = False, scale: Optional[str] = None):
+        self.fleet = isinstance(cfg, FleetConfig)
+        base = cfg.base if self.fleet else cfg
+        if scale is not None:
+            from ..tuning import pick_agg_refresh
+            base = base._replace(agg_refresh_steps=pick_agg_refresh(
+                scale, fallback=base.agg_refresh_steps,
+                n_steps=base.n_steps))
+        self.cfg = FleetConfig(base=base, capacities=cfg.capacities) \
+            if self.fleet else base
+        self.base = base
+        self.core = make_admission_core(base, grid, policy_kind)
+        self.k_refresh = base.agg_refresh_steps
+        self.naive = naive
+        self.width = int(micro_batch or base.max_arrivals)
+        self.n_c = self.cfg.n_clusters if self.fleet else 1
+        self._caps = (jnp.asarray(self.cfg.capacities, jnp.float32)
+                      if self.fleet else
+                      jnp.asarray(base.capacity, jnp.float32))
+        if self.fleet:
+            from ..sim.routing import LeastUtilizedRouter
+            self.router = LeastUtilizedRouter() if router is None else router
+            policy = broadcast_policy(policy, self.n_c)
+        self.policy = policy
+
+        # -- engine state (owned by the engine thread) ----------------------
+        cs = self.core.init()
+        if self.fleet:
+            cs = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (self.n_c,) + x.shape), cs)
+        self._cs: CoreState = cs
+        self._out: Optional[StepOutcome] = None   # current window's dynamics
+        self._util = None                         # decision-time utilization
+        self._step_key = None                     # key of the open window
+        self._acc = 0.0                           # window accept/reject
+        self._rej = 0.0                           # counts ([C] for fleets)
+        self._rej_all = 0.0                       # fleet: routed-nowhere
+        self.ticks = 0
+        self.decisions = 0
+        self._util_trace: list = []
+        self._fail_trace: list = []
+        self._pad = self._pad_template()
+
+        # -- micro-batch front-end ------------------------------------------
+        self._pending: list = []                  # [(Arrival, Future)]
+        self._lock = threading.Lock()
+        self._pump: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+        self._build_jit()
+
+    # ------------------------------------------------------------------ jit
+
+    def _build_jit(self):
+        core, cfg, n_c, caps = self.core, self.base, self.n_c, self._caps
+
+        if not self.fleet:
+            self._j_refresh = jax.jit(core.refresh_aggregates,
+                                      donate_argnums=(0,))
+            self._j_tick = jax.jit(lambda k, cs: core.apply_events(k, cs),
+                                   donate_argnums=(1,))
+            self._j_ingest = jax.jit(self._ingest_one, donate_argnums=(1,))
+
+            def decide(policy, cs, util, batch, valid):
+                cand = core.candidates(batch)
+                cs, accept = core.decide_batch(policy, cs, util, cand,
+                                               batch, valid)
+                # post-placement utilization, so a second flush inside the
+                # same window admits against the already-placed arrivals
+                util = jnp.sum(cs.slots.cores
+                               * cs.slots.alive.astype(jnp.float32))
+                return cs, accept, util
+
+            self._j_decide = jax.jit(decide, donate_argnums=(1,))
+
+            def naive_decide(policy, cs, util, batch, valid):
+                # ablation: full O(slots * grid) aggregate recompute, then a
+                # width-1 decision — the cost of admission without the
+                # incrementally-maintained aggregate
+                cs = core.refresh_aggregates(cs)
+                return decide(policy, cs, util, batch, valid)
+
+            self._j_naive = jax.jit(naive_decide, donate_argnums=(1,))
+        else:
+            self._j_refresh = jax.jit(jax.vmap(core.refresh_aggregates),
+                                      donate_argnums=(0,))
+
+            def fleet_tick(key, cs):
+                keys_c = _cluster_step_keys(key, n_c)
+                return jax.vmap(
+                    lambda cap, k, cs_c: core.apply_events(k, cs_c, cap))(
+                        caps, keys_c, cs)
+
+            self._j_tick = jax.jit(fleet_tick, donate_argnums=(1,))
+            self._j_ingest = jax.jit(
+                jax.vmap(self._ingest_one, in_axes=(0, 0, 0)),
+                donate_argnums=(1,))
+
+            def fleet_decide(policy, cs, util, batch, valid, route_key,
+                             rej_all):
+                from ..sim.routing import RouteContext
+
+                cand = core.candidates(batch)
+                assign = self.router.route(route_key, RouteContext(
+                    cand=cand, c0=batch.c0, valid=valid, agg_el=cs.agg_el,
+                    agg_vl=cs.agg_vl, util=util, capacities=caps,
+                    policy=policy))
+                assign = jnp.clip(assign, 0, n_c)   # sentinel n_c = nowhere
+                mask = valid[None, :] & (
+                    assign[None, :] == jnp.arange(n_c)[:, None])
+                rej_all = rej_all + jnp.sum(
+                    (valid & (assign == n_c)).astype(jnp.float32))
+                cs, accept = jax.vmap(
+                    lambda pol_c, cs_c, u_c, m_c: core.decide_batch(
+                        pol_c, cs_c, u_c, cand, batch, m_c))(
+                            policy, cs, util, mask)
+                n_acc = jnp.sum(accept.astype(jnp.float32), axis=1)
+                n_rej = jnp.sum(mask.astype(jnp.float32), axis=1) - n_acc
+                util = jnp.sum(cs.slots.cores
+                               * cs.slots.alive.astype(jnp.float32), axis=-1)
+                return cs, accept, util, n_acc, n_rej, rej_all
+
+            self._j_decide = jax.jit(fleet_decide, donate_argnums=(1,))
+
+            def fleet_naive(policy, cs, util, batch, valid, route_key,
+                            rej_all):
+                cs = jax.vmap(core.refresh_aggregates)(cs)
+                return fleet_decide(policy, cs, util, batch, valid,
+                                    route_key, rej_all)
+
+            self._j_naive = jax.jit(fleet_naive, donate_argnums=(1,))
+
+        # no donation: the engine keeps referencing the aggregate buffers of
+        # the CoreState it passes in (only the slot accumulators change)
+        self._j_close = jax.jit(
+            lambda cs, out, n_acc, n_rej: _accumulate_step(
+                cs.slots, out, n_acc, n_rej, cfg.dt))
+
+    def _ingest_one(self, capacity, cs: CoreState, ev: ExternalEvents):
+        """Apply one cluster's observed events: the simulated
+        ``_step_dynamics`` arithmetic with the random event draw replaced by
+        the observation (same death clamping, greedy slot-order grants
+        against capacity, and conjugate belief updates)."""
+        from ..core.belief import update_on_events
+
+        cfg, state = self.base, cs.slots
+        alive_f = state.alive.astype(jnp.float32)
+        deaths = jnp.minimum(ev.core_deaths.astype(jnp.float32),
+                             state.cores) * alive_f
+        exposure = state.cores * cfg.dt * alive_f
+        cores = state.cores - deaths
+        cores = jnp.where(ev.spont_death & state.alive, 0.0, cores)
+        alive = state.alive & (cores > 0.0)
+        departed = jnp.sum((state.alive & ~alive).astype(jnp.float32))
+        alive_f = alive.astype(jnp.float32)
+
+        req = ev.scaleout_cores.astype(jnp.float32) * alive_f
+        n_req = ev.n_scaleouts.astype(jnp.float32) * alive_f
+        util = jnp.sum(cores * alive_f)
+        grant = (util + jnp.cumsum(req)) <= capacity
+        cores = cores + jnp.where(grant, req, 0.0)
+        failed = jnp.sum(jnp.where(~grant, n_req, 0.0))
+        util = jnp.sum(cores * alive_f)
+
+        bel = update_on_events(
+            state.bel, core_deaths=deaths, exposure_core_hours=exposure,
+            n_scaleouts=n_req, scaleout_cores=req,
+            alive_hours=cfg.dt * alive_f, priors=cfg.priors)
+        cs = cs._replace(slots=state._replace(alive=alive, cores=cores,
+                                              bel=bel))
+        return cs, StepOutcome(util=util, failed=failed,
+                               n_requests=jnp.sum(n_req), departed=departed)
+
+    # ------------------------------------------------------- step protocol
+
+    def tick(self, key: Optional[jax.Array] = None,
+             events: Optional[ExternalEvents] = None):
+        """Advance cluster dynamics one ``dt``-hour window.
+
+        Closes the previous decision window (folding its counters into the
+        metric accumulators), refreshes the aggregate curves when the
+        blocked ``agg_refresh_steps`` schedule says so, then applies this
+        window's deaths / scale-out grants / belief updates — simulated from
+        the fitted processes under ``key``, or observed via ``events``.
+        """
+        if (key is None) == (events is None):
+            raise ValueError("tick() needs exactly one of key= or events=")
+        self._close_window()
+        if self.ticks % self.k_refresh == 0 and not self.naive:
+            self._cs = self._j_refresh(self._cs)
+        if events is not None:
+            ev = jax.tree.map(jnp.asarray, events)
+            self._cs, self._out = self._j_ingest(self._caps, self._cs, ev)
+            self._step_key = jax.random.PRNGKey(self.ticks)
+        else:
+            self._cs, self._out = self._j_tick(key, self._cs)
+            self._step_key = key
+        self._util = self._out.util
+        self._acc = self._rej = 0.0
+        self.ticks += 1
+
+    def _close_window(self):
+        if self._out is None:
+            return
+        slots, util_end = self._j_close(self._cs, self._out,
+                                        jnp.asarray(self._acc, jnp.float32),
+                                        jnp.asarray(self._rej, jnp.float32))
+        self._cs = self._cs._replace(slots=slots)
+        self._util_trace.append(util_end)
+        self._fail_trace.append(self._out.failed)
+        self._out = None
+
+    # ------------------------------------------------- micro-batch frontend
+
+    def submit(self, arrival: Arrival) -> Future:
+        """Enqueue one admission request; resolves to ``bool`` (admitted)
+        at the next ``flush``. Thread-safe and device-free: callers hand
+        over plain numpy scalars, the engine thread does all jax work."""
+        fut: Future = Future()
+        with self._lock:
+            self._pending.append((arrival, fut))
+        return fut
+
+    @property
+    def n_pending(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def flush(self) -> int:
+        """Decide every pending request in fixed-width micro-batches (or one
+        by one on the naive ablation path); resolves their futures. Returns
+        the number of decisions made."""
+        if self._out is None:
+            raise RuntimeError("flush() before the first tick()")
+        with self._lock:
+            pending, self._pending = self._pending, []
+        if not pending:
+            return 0
+        chunk = 1 if self.naive else self.width
+        for i in range(0, len(pending), chunk):
+            part = pending[i:i + chunk]
+            accept = self._decide([a for a, _ in part])
+            for (_, fut), ok in zip(part, accept):
+                fut.set_result(bool(ok))
+        return len(pending)
+
+    def decide_slice(self, stream_t: ArrivalStream,
+                     valid: np.ndarray) -> np.ndarray:
+        """Decide one pre-stacked width-``micro_batch`` arrival slice (the
+        zero-copy path the equivalence tests and benchmarks drive; ``submit``
+        + ``flush`` stack onto exactly this). Returns the ``[A]`` accept
+        mask (for fleets: OR over the per-cluster ``[C, A]`` decisions)."""
+        if self._out is None:
+            raise RuntimeError("decide_slice() before the first tick()")
+        valid = jnp.asarray(valid)
+        fn = self._j_naive if self.naive else self._j_decide
+        if not self.fleet:
+            self._cs, accept, self._util = fn(
+                self.policy, self._cs, self._util, stream_t, valid)
+            accept = np.asarray(accept)
+            n_acc = float(np.sum(accept))
+            self._acc += n_acc
+            self._rej += float(np.sum(np.asarray(valid))) - n_acc
+        else:
+            rkey = jax.random.fold_in(self._step_key, self.n_c)
+            (self._cs, accept_c, self._util, n_acc, n_rej,
+             self._rej_all) = fn(
+                self.policy, self._cs, self._util, stream_t, valid, rkey,
+                jnp.asarray(self._rej_all, jnp.float32))
+            self._acc = self._acc + np.asarray(n_acc)
+            self._rej = self._rej + np.asarray(n_rej)
+            accept = np.asarray(jnp.any(accept_c, axis=0))
+        self.decisions += int(np.sum(np.asarray(valid)))
+        return accept
+
+    def _decide(self, arrivals: list) -> np.ndarray:
+        """Stack ``Arrival`` tickets into one padded fixed-width slice."""
+        n = len(arrivals)
+        width = 1 if self.naive else self.width
+        lanes = [self._lane(a) for a in arrivals]
+        lanes += [self._pad] * (width - n)
+        batch = jax.tree.map(lambda *xs: np.stack(xs), *lanes)
+        valid = np.arange(width) < n
+        return self.decide_slice(batch, valid)[:n]
+
+    def _lane(self, a: Arrival) -> ArrivalStream:
+        return ArrivalStream(params=a.params, c0=np.float32(a.c0),
+                             bel=a.bel, bel_alt=a.bel_alt,
+                             n_arrivals=np.int32(1))
+
+    def _pad_template(self) -> ArrivalStream:
+        bel = jax.tree.map(np.asarray, belief_from_prior(self.base.priors, ()))
+        params = DeploymentParams(lam=np.float32(0.0), mu=np.float32(1.0),
+                                  sig=np.float32(0.0))
+        return ArrivalStream(params=params, c0=np.float32(1.0), bel=bel,
+                             bel_alt=bel, n_arrivals=np.int32(0))
+
+    # ------------------------------------------------------------ async pump
+
+    def start(self, interval_s: float = 0.001):
+        """Run the flush loop on a background thread: concurrent submitters
+        get their futures resolved as the engine coalesces the queue."""
+        if self._pump is not None:
+            raise RuntimeError("engine pump already running")
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if self.n_pending:
+                    self.flush()
+                else:
+                    self._stop.wait(interval_s)
+
+        self._pump = threading.Thread(target=loop, daemon=True)
+        self._pump.start()
+
+    def stop(self):
+        if self._pump is None:
+            return
+        self._stop.set()
+        self._pump.join()
+        self._pump = None
+        self.flush()
+
+    # -------------------------------------------------------------- metrics
+
+    def metrics(self):
+        """Run-so-far metrics, assembled exactly as the offline drivers
+        assemble theirs (same helpers, same arithmetic): ``RunMetrics`` for
+        a single cluster, ``FleetMetrics`` for a fleet. After ``n_steps``
+        ticks over a ``make_run`` event stream these equal the offline
+        result bit-for-bit."""
+        self._close_window()
+        n_t = len(self._util_trace)
+        horizon = (self.base.horizon_hours if n_t == self.base.n_steps
+                   else max(n_t, 1) * self.base.dt)
+        if n_t:
+            util_trace = jnp.stack(self._util_trace)   # [T] / [T, C]
+            fail_trace = jnp.stack(self._fail_trace)
+        else:
+            shape = (0, self.n_c) if self.fleet else (0,)
+            util_trace = fail_trace = jnp.zeros(shape)
+        if not self.fleet:
+            return jax.tree.map(np.asarray, _run_metrics(
+                self.base, self._cs.slots, util_trace, fail_trace,
+                horizon_hours=horizon))
+        return jax.tree.map(np.asarray, _fleet_metrics(
+            self.base, self._caps, self._cs.slots, util_trace.T,
+            fail_trace.T, jnp.asarray(self._rej_all, jnp.float32),
+            horizon_hours=horizon))
+
+
+# ---------------------------------------------------------------------------
+# Tuned operating points: committed BENCH_<scale>.json rows as the source of
+# the daemon's default thresholds (same artifact-reader pattern as
+# tuning.kcurve — no simulation, no benchmarks import, just the repo root).
+# ---------------------------------------------------------------------------
+
+OPERATING_ROW_PREFIX = "serve"
+
+_OP_RE = re.compile(r"theta=(?P<th>[-\d.e+]+) capacity=(?P<cap>[-\d.e+]+)"
+                    r" tau=(?P<tau>[-\d.e+]+)")
+
+
+def operating_row_name(scale_name: str, kind_name: str) -> str:
+    return f"{OPERATING_ROW_PREFIX}/{scale_name}/operating_point/{kind_name}"
+
+
+def format_operating_derived(theta: float, capacity: float,
+                             tau: float) -> str:
+    return f"theta={theta:.6g} capacity={capacity:.6g} tau={tau:.3g}"
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatingPoint:
+    """A tuned (theta, capacity, tau) admission operating point recorded in
+    a BENCH artifact. ``theta`` is the threshold (zeroth/first, in cores —
+    rescaled linearly when serving a different capacity) or rho (second,
+    scale-free)."""
+
+    kind_name: str
+    theta: float
+    capacity: float
+    tau: float
+
+    def theta_for(self, capacity: float) -> float:
+        if self.kind_name == "second":
+            return self.theta
+        return self.theta * (capacity / self.capacity)
+
+
+def load_operating_point(kind_name: str, scale_name: str = "quick",
+                         bench_path: Optional[str] = None
+                         ) -> Optional[OperatingPoint]:
+    """Read the tuned operating point for a policy kind from the committed
+    ``BENCH_<scale>.json`` (or ``bench_path`` / ``$REPRO_BENCH_JSON``).
+    Returns ``None`` when no row exists — callers fall back to their
+    hand-picked constants (and should warn)."""
+    path = bench_path or os.environ.get("REPRO_BENCH_JSON") or os.path.join(
+        _REPO_ROOT, f"BENCH_{scale_name}.json")
+    try:
+        with open(path, encoding="utf-8") as f:
+            rows = json.load(f).get("rows", [])
+    except (OSError, ValueError):
+        return None
+    name = operating_row_name(scale_name, kind_name)
+    for row in rows:
+        if row.get("name") != name:
+            continue
+        m = _OP_RE.match(row.get("derived", ""))
+        if m:
+            return OperatingPoint(kind_name=kind_name, theta=float(m["th"]),
+                                  capacity=float(m["cap"]),
+                                  tau=float(m["tau"]))
+    return None
+
+
+def default_policy_param(kind_name: str, capacity: float,
+                         scale_name: str = "quick",
+                         bench_path: Optional[str] = None) -> float:
+    """The daemon's default threshold/rho: the tuned operating point from
+    the committed BENCH artifact, rescaled to ``capacity``; the legacy
+    hand-picked constants (0.15 / 0.7 * capacity) only as a warned
+    fallback."""
+    op = load_operating_point(kind_name, scale_name, bench_path)
+    if op is not None:
+        return op.theta_for(capacity)
+    warnings.warn(
+        f"no tuned operating point for policy {kind_name!r} at scale "
+        f"{scale_name!r} (run benchmarks.serve_bench to record one); "
+        "falling back to hand-picked constants", stacklevel=2)
+    return 0.15 if kind_name == "second" else 0.7 * capacity

@@ -29,19 +29,34 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, *, max_batch: int = 8,
-                 max_seq: int = 512, eos_id: int = 1, mesh=None):
+                 max_seq: int = 512, eos_id: int = 1, mesh=None,
+                 prefill_mode: str = "fused"):
+        if prefill_mode not in ("fused", "loop"):
+            raise ValueError(f"prefill_mode must be fused|loop: {prefill_mode}")
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.mesh = mesh
+        self.prefill_mode = prefill_mode
         self.cache = model.init_cache(max_batch, max_seq, dtype=jnp.float32)
         self.active: list[Optional[Request]] = [None] * max_batch
         self.waiting: list[Request] = []
+        self.finished: list[Request] = []
         self.tokens = np.zeros(max_batch, np.int32)
         self._decode = jax.jit(
             lambda p, t, c: model.decode_step(p, t, c, mesh))
+
+        def _prefill_scan(p, toks, cache, prompt, slot):
+            def body(c, tok):
+                _, c = model.decode_step(p, toks.at[slot].set(tok), c, mesh)
+                return c, None
+            return jax.lax.scan(body, cache, prompt)[0]
+
+        # one dispatch per prompt instead of one per token; retraced per
+        # distinct prompt length (scan lengths are static)
+        self._prefill = jax.jit(_prefill_scan)
 
     # -- queue management -----------------------------------------------------
 
@@ -63,11 +78,19 @@ class ServeEngine:
             return False
         req = self.waiting.pop(0)
         # teacher-force the prompt through decode steps for this slot only
-        for tok in req.prompt[:-1]:
-            step_tokens = self.tokens.copy()
-            step_tokens[slot] = tok
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(step_tokens), self.cache)
+        # (other slots re-decode their current token, exactly as in the
+        # token-by-token loop, so both modes advance the cache identically)
+        if len(req.prompt) > 1:
+            if self.prefill_mode == "fused":
+                self.cache = self._prefill(
+                    self.params, jnp.asarray(self.tokens), self.cache,
+                    jnp.asarray(req.prompt[:-1]), jnp.int32(slot))
+            else:
+                for tok in req.prompt[:-1]:
+                    step_tokens = self.tokens.copy()
+                    step_tokens[slot] = tok
+                    _, self.cache = self._decode(
+                        self.params, jnp.asarray(step_tokens), self.cache)
         self.tokens[slot] = int(req.prompt[-1])
         self.active[slot] = req
         return True
@@ -91,12 +114,15 @@ class ServeEngine:
             if tok == self.eos_id or len(req.out_tokens) >= req.max_new_tokens:
                 req.done = True
                 self.active[slot] = None
+                self.finished.append(req)
         return emitted
 
     def run_until_drained(self, max_steps: int = 10_000) -> list:
-        done = []
+        """Step until queues empty; returns the requests completed during
+        this call (in completion order)."""
+        n0 = len(self.finished)
         for _ in range(max_steps):
             if not self.waiting and self.n_active == 0:
                 break
             self.step()
-        return done
+        return self.finished[n0:]

@@ -6,10 +6,11 @@ heterogeneous clusters with a routing layer ahead of per-cluster admission —
 the paper's §2 provider view). Routers live in ``sim.routing``.
 """
 from .simulator import (AGG_FUSED, AGG_KERNEL, AGG_REFERENCE, GLOBAL, PSEUDO,
-                        MIX_LABELED, MIX_UNLABELED, ArrivalSource,
-                        ArrivalStream, FleetConfig, FleetMetrics,
-                        PriorArrivalSource, RunMetrics, SimConfig,
-                        broadcast_policy, draw_arrival_stream, make_config,
+                        MIX_LABELED, MIX_UNLABELED, AdmissionCore,
+                        ArrivalSource, ArrivalStream, CoreState, FleetConfig,
+                        FleetMetrics, PriorArrivalSource, RunMetrics,
+                        SimConfig, SimState, StepOutcome, broadcast_policy,
+                        draw_arrival_stream, make_admission_core, make_config,
                         make_fleet_config, make_fleet_run, make_run,
                         run_batch, run_keyed_batch, stream_config)
 from .routing import (ROUTERS, LeastUtilizedRouter, PowerOfTwoRouter,
@@ -24,10 +25,12 @@ from .importance import (ImportancePlan, TraceEnsemblePlan, badness_measure,
 
 __all__ = [
     "AGG_FUSED", "AGG_KERNEL", "AGG_REFERENCE", "GLOBAL", "PSEUDO",
-    "MIX_LABELED", "MIX_UNLABELED", "ArrivalSource", "ArrivalStream",
-    "FleetConfig", "FleetMetrics", "PriorArrivalSource", "RunMetrics",
-    "SimConfig", "broadcast_policy", "draw_arrival_stream", "make_config",
-    "make_fleet_config", "make_fleet_run", "make_run",
+    "MIX_LABELED", "MIX_UNLABELED", "AdmissionCore", "ArrivalSource",
+    "ArrivalStream", "CoreState", "FleetConfig", "FleetMetrics",
+    "PriorArrivalSource", "RunMetrics", "SimConfig", "SimState",
+    "StepOutcome", "broadcast_policy", "draw_arrival_stream",
+    "make_admission_core", "make_config", "make_fleet_config",
+    "make_fleet_run", "make_run",
     "run_batch", "run_keyed_batch", "stream_config",
     "ROUTERS", "LeastUtilizedRouter", "PowerOfTwoRouter", "RandomRouter",
     "RouteContext", "Router", "ThresholdCascadeRouter",

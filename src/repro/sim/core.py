@@ -1,0 +1,573 @@
+"""The admission core: one reusable state + pure-function layer shared by the
+offline simulators and the online serving engine.
+
+The paper's provider "has to continuously decide" admission as workloads
+arrive — the same decision machinery must therefore run both *offline*
+(Monte-Carlo ``lax.scan`` over a pre-drawn horizon, ``sim.simulator``) and
+*online* (a long-lived engine answering micro-batched admission requests,
+``serve.admission``). This module is that shared layer:
+
+  * ``CoreState`` — the complete admission state as one pytree: the slot
+    table with per-deployment conjugate beliefs (``SimState``) plus the
+    incrementally-maintained cluster-wide aggregate moment curves.
+  * ``make_admission_core(cfg, grid, policy_kind)`` — closes over the static
+    configuration and returns an ``AdmissionCore`` bundle of **pure**
+    functions over ``CoreState``:
+
+      - ``init()``                      fresh empty state
+      - ``refresh_aggregates(cs)``      full aggregate recompute from slots
+      - ``apply_events(key, cs)``       one ``dt``-hour step of deaths /
+                                        scale-out grants / belief updates
+      - ``candidates(stream_t)``        [A, N] candidate moment curves
+      - ``decide_batch(policy, cs, …)`` sequential admission + slot
+                                        placement + incremental fold
+
+``sim.simulator.make_run`` / ``make_fleet_run`` are thin scan drivers over
+these functions (the fleet vmaps them over a leading cluster axis), and the
+online engine calls the same functions one step at a time — which is what
+makes online/offline equivalence testable bit-for-bit rather than merely
+plausible. Static configuration (``SimConfig``/``FleetConfig``), the
+pre-drawn ``ArrivalStream`` and its pluggable ``ArrivalSource`` live here
+too so both layers share one vocabulary.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.belief import (GammaBelief, apply_pseudo_observations,
+                           belief_from_prior, observe_initial_size,
+                           update_on_events)
+from ..core.moments import (MomentCurves, aggregate_moment_curves,
+                            moment_curves, moment_curves_fused)
+from ..core.policies import ZEROTH, PolicyParams, admit_sequential
+from ..core.pricing import mixture_moments
+from ..core.processes import (DeploymentParams, PopulationPriors,
+                              sample_params, sample_pseudo_observations,
+                              sample_step_events)
+
+GLOBAL, PSEUDO, MIX_LABELED, MIX_UNLABELED = "global", "pseudo", "labeled", "unlabeled"
+AGG_FUSED, AGG_REFERENCE, AGG_KERNEL = "fused", "reference", "kernel"
+
+
+class SimConfig(NamedTuple):
+    """Static simulation configuration (python values; changing any re-jits)."""
+
+    capacity: float = 2_000.0
+    arrival_rate: float = 0.1        # deployments/hour (paper: 1.0 at c=20,000)
+    horizon_hours: float = 365 * 24.0
+    dt: float = 6.0                  # hours per step
+    max_slots: int = 1024
+    max_arrivals: int = 4            # cap per step (Poisson tail clipped)
+    prior_mode: str = GLOBAL         # GLOBAL | PSEUDO | MIX_LABELED | MIX_UNLABELED
+    n_pseudo_obs: int = 0            # paper §6: 0/1/5/50
+    d_points: int = 24               # D-term checkpoint count
+    use_kernel: bool = False         # Pallas moment_curves kernel (TPU path;
+                                     # interpret-mode on CPU, so off by default)
+    agg_backend: str = AGG_FUSED     # AGG_FUSED | AGG_REFERENCE | AGG_KERNEL:
+                                     # how the cluster-wide aggregate curves
+                                     # are computed each step (see make_run)
+    agg_refresh_steps: int = 1       # full aggregate recompute every K steps;
+                                     # between refreshes admitted candidates'
+                                     # curves are folded in incrementally
+                                     # (K=1: recompute every step)
+    priors: PopulationPriors = None  # population priors; prefer make_config,
+                                     # which defaults these to AZURE_PRIORS
+
+    @property
+    def n_steps(self) -> int:
+        return int(round(self.horizon_hours / self.dt))
+
+
+def make_config(**overrides) -> SimConfig:
+    """Documented SimConfig constructor: ``priors`` defaults to the fitted
+    Azure priors instead of ``None`` and every field is validated eagerly, so
+    a bad config fails here rather than deep inside ``belief_from_prior``."""
+    if overrides.get("priors") is None:
+        from ..core import AZURE_PRIORS
+
+        overrides["priors"] = AZURE_PRIORS
+    return _validate_config(SimConfig(**overrides))
+
+
+def _validate_config(cfg: SimConfig) -> SimConfig:
+    if cfg.priors is None:
+        raise ValueError(
+            "SimConfig.priors is None. Construct configs via "
+            "repro.sim.make_config(...) (defaults to AZURE_PRIORS) or pass "
+            "priors=<PopulationPriors> explicitly."
+        )
+    if cfg.prior_mode not in (GLOBAL, PSEUDO, MIX_LABELED, MIX_UNLABELED):
+        raise ValueError(f"unknown prior_mode {cfg.prior_mode!r}")
+    if cfg.agg_backend not in (AGG_FUSED, AGG_REFERENCE, AGG_KERNEL):
+        raise ValueError(f"unknown agg_backend {cfg.agg_backend!r}")
+    if cfg.n_pseudo_obs < 0:
+        raise ValueError(f"n_pseudo_obs={cfg.n_pseudo_obs} must be >= 0")
+    if cfg.prior_mode != GLOBAL and cfg.n_pseudo_obs == 0:
+        raise ValueError(
+            f"prior_mode={cfg.prior_mode!r} with n_pseudo_obs=0 silently "
+            "degenerates to GLOBAL (zero pseudo observations leave every "
+            "belief — including the §7 mixture components — at the "
+            "population prior): use prior_mode=GLOBAL, or set "
+            "n_pseudo_obs >= 1"
+        )
+    if cfg.n_steps <= 0 or cfg.max_slots <= 0 or cfg.max_arrivals <= 0:
+        raise ValueError(
+            f"degenerate SimConfig: n_steps={cfg.n_steps} "
+            f"max_slots={cfg.max_slots} max_arrivals={cfg.max_arrivals}"
+        )
+    if cfg.agg_refresh_steps < 1 or cfg.n_steps % cfg.agg_refresh_steps:
+        raise ValueError(
+            f"agg_refresh_steps={cfg.agg_refresh_steps} must be >= 1 and "
+            f"divide n_steps={cfg.n_steps}"
+        )
+    return cfg
+
+
+class FleetConfig(NamedTuple):
+    """Static fleet configuration: a per-cluster ``SimConfig`` template plus
+    the per-cluster capacities.
+
+    ``base`` describes each cluster's slot array, step size, information
+    model, and aggregate-refresh blocking — *and* the fleet-wide arrival
+    process (``arrival_rate``/``max_arrivals`` are the whole fleet's: one
+    stream is drawn and routed, not one per cluster). ``base.capacity``
+    conventionally holds the fleet total (``make_fleet_config`` sets it);
+    the authoritative per-cluster capacities are ``capacities``.
+    """
+
+    base: SimConfig
+    capacities: tuple                # per-cluster core capacities (static)
+
+    @property
+    def n_clusters(self) -> int:
+        return len(self.capacities)
+
+    @property
+    def total_capacity(self) -> float:
+        return float(sum(self.capacities))
+
+
+def make_fleet_config(capacities, **base_overrides) -> FleetConfig:
+    """Documented FleetConfig constructor: ``base_overrides`` build the
+    per-cluster template through ``make_config`` (so priors default to
+    AZURE_PRIORS and every field is validated); ``base.capacity`` defaults
+    to the fleet total."""
+    caps = tuple(float(c) for c in capacities)
+    base_overrides.setdefault("capacity", sum(caps))
+    return _validate_fleet_config(
+        FleetConfig(base=make_config(**base_overrides), capacities=caps))
+
+
+def _validate_fleet_config(fcfg: FleetConfig) -> FleetConfig:
+    if not fcfg.capacities:
+        raise ValueError("FleetConfig.capacities is empty")
+    if any(not np.isfinite(c) or c <= 0.0 for c in fcfg.capacities):
+        raise ValueError(
+            f"FleetConfig.capacities must be positive, got {fcfg.capacities}")
+    _validate_config(fcfg.base)
+    return fcfg
+
+
+def stream_config(cfg) -> SimConfig:
+    """The ``SimConfig`` governing arrival-stream layout and priors.
+
+    Identity for a plain ``SimConfig``; for a ``FleetConfig`` it is the base
+    template with the fleet-total capacity — fleet arrivals are drawn (or
+    replayed) fleet-wide and only routed to clusters at simulation time, so
+    everything stream-shaped (``draw_arrival_stream``, trace replay, badness
+    measures) works on this reduced config.
+    """
+    if isinstance(cfg, FleetConfig):
+        return cfg.base._replace(capacity=cfg.total_capacity)
+    return cfg
+
+
+class ArrivalStream(NamedTuple):
+    """Pre-drawn per-(step, arrival-slot) quantities. Leading dims [T, A]."""
+
+    params: DeploymentParams         # true parameters of the arriving deployment
+    c0: jax.Array                    # initial request size
+    bel: GammaBelief                 # provider's prior belief for the arrival
+    bel_alt: GammaBelief             # second mixture component (unlabeled mode)
+    n_arrivals: jax.Array            # [T] arrivals per step (already capped)
+
+
+class ArrivalSource:
+    """Pluggable producer of the pre-drawn ``ArrivalStream``.
+
+    ``make_run`` consumes arrivals exclusively through this interface: the
+    scan body, policies, and importance sampling only ever see the stream,
+    so any source that returns correctly-shaped ``[n_steps, max_arrivals]``
+    fields plugs in without touching the simulator. Two backends ship:
+    ``PriorArrivalSource`` (sample the population priors — the seed
+    behavior) and ``traces.replay.TraceArrivalSource`` (replay a recorded
+    ``WorkloadTrace``). ``stream`` is called inside the jitted run, so it
+    must be traceable; closed-over trace arrays become constants.
+    """
+
+    def stream(self, key: jax.Array, cfg: SimConfig) -> "ArrivalStream":
+        raise NotImplementedError
+
+
+class PriorArrivalSource(ArrivalSource):
+    """Draw every arrival from the population priors (paper §5 default)."""
+
+    def stream(self, key: jax.Array, cfg: SimConfig) -> "ArrivalStream":
+        return draw_arrival_stream(key, cfg)
+
+
+def draw_arrival_stream(key: jax.Array, cfg: SimConfig) -> ArrivalStream:
+    """Pre-draw every arrival's true params, request size and prior belief."""
+    cfg = stream_config(cfg)
+    t_steps, a_max = cfg.n_steps, cfg.max_arrivals
+    shape = (t_steps, a_max)
+    kn, kp, kc, ko, kq, kb = jax.random.split(key, 6)
+    n_arr = jnp.minimum(
+        jax.random.poisson(kn, cfg.arrival_rate * cfg.dt, (t_steps,)), a_max
+    )
+    params = sample_params(kp, cfg.priors, shape)
+    c0 = (1 + jax.random.poisson(kc, params.sig)).astype(jnp.float32)
+
+    prior = belief_from_prior(cfg.priors, shape)
+    if cfg.prior_mode == GLOBAL:
+        bel = prior
+        bel_alt = bel
+    elif cfg.prior_mode == PSEUDO:
+        obs = sample_pseudo_observations(ko, params, cfg.priors, cfg.n_pseudo_obs)
+        bel = apply_pseudo_observations(prior, obs, cfg.priors)
+        bel_alt = bel
+    else:
+        # §7: the user has two types; the submitted deployment is the drawn
+        # ``params``; the alternative type is an independent draw. The provider
+        # holds n_pseudo_obs observations of each type.
+        alt = sample_params(kq, cfg.priors, shape)
+        k1, k2 = jax.random.split(kb)
+        obs = sample_pseudo_observations(k1, params, cfg.priors, cfg.n_pseudo_obs)
+        obs_alt = sample_pseudo_observations(k2, alt, cfg.priors, cfg.n_pseudo_obs)
+        bel = apply_pseudo_observations(prior, obs, cfg.priors)
+        bel_alt = apply_pseudo_observations(prior, obs_alt, cfg.priors)
+    bel = observe_initial_size(bel, c0)
+    return ArrivalStream(params=params, c0=c0, bel=bel, bel_alt=bel_alt,
+                         n_arrivals=n_arr)
+
+
+class SimState(NamedTuple):
+    """Slot table (fixed-capacity deployment array + conjugate beliefs) plus
+    the run-level metric accumulators."""
+
+    alive: jax.Array              # [S] bool
+    cores: jax.Array              # [S] float32
+    params: DeploymentParams      # [S]
+    bel: GammaBelief              # [S]
+    core_hours: jax.Array
+    fail_requests: jax.Array
+    total_requests: jax.Array
+    arr_accepted: jax.Array
+    arr_rejected: jax.Array
+    slot_overflow: jax.Array
+    n_departed: jax.Array
+
+
+class CoreState(NamedTuple):
+    """The complete admission state: slot table + beliefs (``slots``) and the
+    incrementally-maintained cluster-wide aggregate moment curves. One
+    pytree, so a long-lived engine can keep it device-resident and donate it
+    through every jitted step (the fleet gives every leaf a leading ``[C]``
+    cluster axis)."""
+
+    slots: SimState
+    agg_el: jax.Array             # [N] aggregate E[L_n] over admitted slots
+    agg_vl: jax.Array             # [N] aggregate V[L_n]
+
+
+class StepOutcome(NamedTuple):
+    """Per-step dynamics summary from ``apply_events`` (metric inputs)."""
+
+    util: jax.Array               # active cores after deaths + grants
+    failed: jax.Array             # scale-out requests that did not fit
+    n_requests: jax.Array         # total scale-out requests this step
+    departed: jax.Array           # deployments that died this step
+
+
+def _init_state(cfg: SimConfig) -> SimState:
+    s = cfg.max_slots
+    # explicit dtype => strong-typed f32: the online engine re-feeds this
+    # state through jit, and a weak-typed leaf would flip to strong on the
+    # first slot placement and force a full recompile of every step fn
+    zero_params = DeploymentParams(
+        lam=jnp.zeros(s), mu=jnp.full((s,), 1.0, jnp.float32),
+        sig=jnp.zeros(s)
+    )
+    return SimState(
+        alive=jnp.zeros(s, bool),
+        cores=jnp.zeros(s, jnp.float32),
+        params=zero_params,
+        bel=belief_from_prior(cfg.priors, (s,)),
+        core_hours=jnp.zeros(()),
+        fail_requests=jnp.zeros(()),
+        total_requests=jnp.zeros(()),
+        arr_accepted=jnp.zeros(()),
+        arr_rejected=jnp.zeros(()),
+        slot_overflow=jnp.zeros(()),
+        n_departed=jnp.zeros(()),
+    )
+
+
+def _place_arrivals(state: SimState, accept, stream_t: ArrivalStream, cfg: SimConfig):
+    """Place accepted arrivals into free slots, one vectorized pass.
+
+    The i-th accepted arrival goes to the i-th free slot (in slot order) —
+    identical semantics to the previous sequential argmin unroll, but a single
+    [A, S] rank-match instead of A passes over the slot array. Accepted
+    arrivals beyond the number of free slots are counted as slot overflow.
+
+    Returns (state, placed_arrival [A]) — the mask of accepted arrivals that
+    actually landed in a slot, so the caller folds only *real* deployments
+    into the maintained aggregate (overflowed arrivals must not haunt it).
+    """
+    alive = state.alive
+    free = ~alive
+    rank = jnp.cumsum(free.astype(jnp.int32))          # free-slot rank, 1-based
+    acc = accept.astype(jnp.int32)
+    ordinal = jnp.cumsum(acc) * acc                    # i-th accepted, 1-based
+    n_free = rank[-1]
+    placed_arrival = accept & (ordinal <= n_free)      # [A]
+    overflow = state.slot_overflow + jnp.sum(
+        jnp.where(accept & ~placed_arrival, 1.0, 0.0))
+
+    hit = free[None, :] & (rank[None, :] == ordinal[:, None]) & accept[:, None]
+    placed = jnp.any(hit, axis=0)                      # [S]
+
+    def merge(old, new_a):
+        upd = hit.astype(old.dtype).T @ new_a
+        return jnp.where(placed, upd, old)
+
+    cores = merge(state.cores, stream_t.c0)
+    params = jax.tree.map(lambda o, n: merge(o, n), state.params,
+                          stream_t.params)
+    bel = jax.tree.map(lambda o, n: merge(o, n), state.bel, stream_t.bel)
+    state = state._replace(alive=alive | placed, cores=cores, params=params,
+                           bel=bel, slot_overflow=overflow)
+    return state, placed_arrival
+
+
+def _make_aggregate_fn(cfg: SimConfig, grid: jax.Array):
+    """Cluster-wide sum-over-alive-slots curve evaluator, by backend.
+
+    AGG_REFERENCE is the seed per-slot path (materialize [S, N], mask, sum) —
+    kept as the oracle the fast paths are equivalence-tested against.
+    AGG_FUSED reduces block-by-block without the [S, N] intermediate;
+    AGG_KERNEL is the Pallas aggregated-output kernel (interpret-mode on CPU).
+    """
+    if cfg.agg_backend == AGG_REFERENCE:
+
+        def aggregate(bel, cores, alive):
+            curves = moment_curves(bel, cores, grid, cfg.priors,
+                                   d_points=cfg.d_points)
+            alive_f = alive.astype(jnp.float32)
+            return (jnp.sum(curves.EL * alive_f[:, None], axis=0),
+                    jnp.sum(curves.VL * alive_f[:, None], axis=0))
+    elif cfg.agg_backend == AGG_KERNEL:
+        from ..kernels.moment_curves.ops import aggregate_moment_curves_kernel
+
+        def aggregate(bel, cores, alive):
+            out = aggregate_moment_curves_kernel(
+                bel, cores, alive, grid, cfg.priors, d_points=cfg.d_points)
+            return out.EL, out.VL
+    else:
+
+        def aggregate(bel, cores, alive):
+            out = aggregate_moment_curves(bel, cores, alive, grid, cfg.priors,
+                                          d_points=cfg.d_points)
+            return out.EL, out.VL
+
+    return aggregate
+
+
+def _make_curves_fn(cfg: SimConfig):
+    """Per-candidate moment-curve evaluator (fused jnp or Pallas kernel)."""
+    if cfg.use_kernel:
+        from ..kernels.moment_curves.ops import moment_curves_kernel
+
+        def curves_fn(bel, cores, grid_, priors, d_points):
+            flat_bel = jax.tree.map(lambda a: a.reshape(-1), bel)
+            out = moment_curves_kernel(flat_bel, cores.reshape(-1), grid_,
+                                       priors, d_points=d_points)
+            shape = cores.shape + (grid_.shape[0],)
+            return MomentCurves(out.EL.reshape(shape), out.VL.reshape(shape))
+
+        return curves_fn
+    return moment_curves_fused
+
+
+def _make_candidates_fn(cfg: SimConfig, grid: jax.Array, needs_moments: bool,
+                        n_grid: int, curves_fn):
+    """[A, N] candidate curves for one step's pre-drawn arrivals (mixture
+    moments in the §7 unlabeled mode; zeros when the policy ignores them)."""
+
+    def candidates(stream_t: ArrivalStream) -> MomentCurves:
+        if not needs_moments:
+            return MomentCurves(EL=jnp.zeros((stream_t.c0.shape[0], n_grid)),
+                                VL=jnp.zeros((stream_t.c0.shape[0], n_grid)))
+        cand = curves_fn(stream_t.bel, stream_t.c0, grid, cfg.priors,
+                         d_points=cfg.d_points)
+        if cfg.prior_mode == MIX_UNLABELED:
+            cand_alt = curves_fn(stream_t.bel_alt, stream_t.c0, grid,
+                                 cfg.priors, d_points=cfg.d_points)
+            stacked = MomentCurves(
+                EL=jnp.stack([cand.EL, cand_alt.EL]),
+                VL=jnp.stack([cand.VL, cand_alt.VL]),
+            )
+            cand = mixture_moments(jnp.asarray([0.5, 0.5]), stacked)
+        return cand
+
+    return candidates
+
+
+def _step_dynamics(cfg: SimConfig, capacity, key, state: SimState):
+    """Steps 1–3 of one ``dt``-hour step for ONE cluster: deaths, scale-out
+    grants against ``capacity`` (a traced value — the fleet passes each
+    cluster's own), and conjugate belief updates.
+
+    Returns ``(state, util, failed, n_req_total, departed)`` with the slot
+    arrays updated and the metric counters untouched (the caller accumulates
+    them after admission).
+    """
+    alive_f = state.alive.astype(jnp.float32)
+
+    # 1. deaths ---------------------------------------------------------
+    ev = sample_step_events(key, state.params, state.cores, cfg.priors,
+                            cfg.dt, alive=state.alive)
+    deaths = jnp.minimum(ev.core_deaths.astype(jnp.float32), state.cores) * alive_f
+    exposure = state.cores * cfg.dt * alive_f
+    cores = state.cores - deaths
+    cores = jnp.where(ev.spont_death & state.alive, 0.0, cores)
+    alive = state.alive & (cores > 0.0)
+    departed = jnp.sum((state.alive & ~alive).astype(jnp.float32))
+    alive_f = alive.astype(jnp.float32)
+
+    # 2. scale-outs (only deployments still alive request) ---------------
+    req = ev.scaleout_cores.astype(jnp.float32) * alive_f
+    n_req = ev.n_scaleouts.astype(jnp.float32) * alive_f
+    util = jnp.sum(cores * alive_f)
+    grant = (util + jnp.cumsum(req)) <= capacity
+    cores = cores + jnp.where(grant, req, 0.0)
+    failed = jnp.sum(jnp.where(~grant, n_req, 0.0))
+    util = jnp.sum(cores * alive_f)
+
+    # 3. belief updates (requests are observed whether or not granted) ---
+    bel = update_on_events(
+        state.bel,
+        core_deaths=deaths,
+        exposure_core_hours=exposure,
+        n_scaleouts=n_req,
+        scaleout_cores=req,
+        alive_hours=cfg.dt * alive_f,
+        priors=cfg.priors,
+    )
+    state = state._replace(alive=alive, cores=cores, bel=bel)
+    return state, util, failed, jnp.sum(n_req), departed
+
+
+def _admit_place_fold(cfg: SimConfig, policy: PolicyParams, state: SimState,
+                      agg_el, agg_vl, util, cand: MomentCurves,
+                      stream_t: ArrivalStream, valid):
+    """Step 4 for ONE cluster: sequential admission of the (cluster-masked)
+    candidates against the maintained aggregate, slot placement, and the
+    incremental aggregate fold of *placed* arrivals.
+
+    Folds only arrivals that actually landed in a slot into the carried
+    aggregate — accepted-but-overflowed ones never became deployments (the
+    seed's per-step recompute likewise only ever saw placed slots).
+    """
+    res = admit_sequential(policy, agg_el, agg_vl, util, cand,
+                           stream_t.c0, valid)
+    state, placed_arrival = _place_arrivals(state, res.accept, stream_t, cfg)
+    placed_f = placed_arrival.astype(jnp.float32)
+    agg_el = agg_el + jnp.einsum("an,a->n", cand.EL, placed_f)
+    agg_vl = agg_vl + jnp.einsum("an,a->n", cand.VL, placed_f)
+    return state, agg_el, agg_vl, res.accept
+
+
+class AdmissionCore(NamedTuple):
+    """Bundle of pure functions over ``CoreState`` for one static
+    configuration (see module docstring). Built by ``make_admission_core``;
+    every field closing over ``cfg``/``grid``/``policy_kind`` so callers jit,
+    vmap, or scan them freely."""
+
+    cfg: SimConfig
+    grid: jax.Array
+    policy_kind: int
+    needs_moments: bool
+    n_grid: int
+    init: Callable[[], CoreState]
+    refresh_aggregates: Callable[[CoreState], CoreState]
+    apply_events: Callable[..., tuple]
+    candidates: Callable[[ArrivalStream], MomentCurves]
+    decide_batch: Callable[..., tuple]
+
+
+def make_admission_core(cfg: SimConfig, grid: jax.Array,
+                        policy_kind: int) -> AdmissionCore:
+    """Build the pure admission-core function bundle for one configuration.
+
+    All five functions are pure pytree -> pytree maps (no python state), so
+    the offline drivers scan them, the fleet vmaps them over the cluster
+    axis, and the online engine jits them individually with donated
+    ``CoreState`` buffers — one implementation, three execution regimes.
+    """
+    _validate_config(cfg)
+    needs_moments = policy_kind != ZEROTH
+    n_grid = grid.shape[0] if needs_moments else 1
+    curves_fn = _make_curves_fn(cfg)
+    aggregate_fn = _make_aggregate_fn(cfg, grid)
+    candidates_fn = _make_candidates_fn(cfg, grid, needs_moments, n_grid,
+                                        curves_fn)
+
+    def init() -> CoreState:
+        return CoreState(slots=_init_state(cfg),
+                         agg_el=jnp.zeros((n_grid,)),
+                         agg_vl=jnp.zeros((n_grid,)))
+
+    def refresh_aggregates(cs: CoreState) -> CoreState:
+        """Full aggregate recompute from the slot table (block boundary).
+        Zeroth-moment policies never read the curves, so their refresh
+        keeps the zero placeholder instead of paying for the reduction."""
+        if not needs_moments:
+            return cs._replace(agg_el=jnp.zeros((n_grid,)),
+                               agg_vl=jnp.zeros((n_grid,)))
+        agg_el, agg_vl = aggregate_fn(cs.slots.bel, cs.slots.cores,
+                                      cs.slots.alive)
+        return cs._replace(agg_el=agg_el, agg_vl=agg_vl)
+
+    def apply_events(key: jax.Array, cs: CoreState, capacity=None):
+        """One ``dt``-hour step of cluster dynamics: deaths, scale-out
+        grants against ``capacity`` (defaults to the config's own; the
+        fleet passes each cluster's), and conjugate belief updates. The
+        maintained aggregate is NOT touched — within-block staleness is the
+        ``agg_refresh_steps`` contract."""
+        cap = cfg.capacity if capacity is None else capacity
+        slots, util, failed, n_req, departed = _step_dynamics(
+            cfg, cap, key, cs.slots)
+        return cs._replace(slots=slots), StepOutcome(
+            util=util, failed=failed, n_requests=n_req, departed=departed)
+
+    def decide_batch(policy: PolicyParams, cs: CoreState, util,
+                     cand: MomentCurves, stream_t: ArrivalStream, valid):
+        """Greedy first-come-first-served admission of a candidate batch
+        against the maintained aggregate, slot placement, and the
+        incremental fold of placed arrivals. Returns (cs, accept [A])."""
+        slots, agg_el, agg_vl, accept = _admit_place_fold(
+            cfg, policy, cs.slots, cs.agg_el, cs.agg_vl, util, cand,
+            stream_t, valid)
+        return CoreState(slots=slots, agg_el=agg_el, agg_vl=agg_vl), accept
+
+    return AdmissionCore(cfg=cfg, grid=grid, policy_kind=policy_kind,
+                         needs_moments=needs_moments, n_grid=n_grid,
+                         init=init, refresh_aggregates=refresh_aggregates,
+                         apply_events=apply_events, candidates=candidates_fn,
+                         decide_batch=decide_batch)

@@ -11,6 +11,13 @@ step of length ``dt`` hours:
   4. arrivals (Poisson, capped at ``max_arrivals`` per step) admitted by the
      policy via core.policies.admit_sequential, then placed into free slots
 
+Steps 1–3 are the admission core's ``apply_events``, step 4 its
+``decide_batch`` — the step machinery itself lives in ``sim.core`` as pure
+functions over one ``CoreState`` pytree (slot table + beliefs + maintained
+aggregate curves), shared bit-for-bit with the online serving engine
+(``serve.admission``). ``make_run``/``make_fleet_run`` below are thin
+``lax.scan`` drivers over that core plus the run-level metric accounting.
+
 Arrival parameters are **pre-drawn outside the scan** so importance sampling
 (App. D) can bucket a run by its badness measure before paying for the full
 simulation, and so labeled/unlabeled (§7) and pseudo-observation (§6) priors
@@ -29,16 +36,16 @@ slot-array size, which is what makes the paper-scale preset feasible on CPU.
 
 **Fleet mode** (paper §2's provider view: dispatch *then* admit): the same
 step machinery runs with a leading cluster axis. ``make_fleet_run`` simulates
-``FleetConfig.n_clusters`` heterogeneous clusters in one scan — ``SimState``,
-the maintained aggregate curves, and the per-cluster ``RunMetrics`` all carry
-a leading ``[C]`` axis (vmap inside the scan body; ``capacity`` becomes the
+``FleetConfig.n_clusters`` heterogeneous clusters in one scan — ``CoreState``
+and the per-cluster ``RunMetrics`` all carry a leading ``[C]`` axis (the core
+functions are vmapped inside the scan body; ``capacity`` becomes the
 per-cluster array), and the blocked ``agg_refresh_steps`` refresh runs per
 cluster. A pluggable ``sim.routing.Router`` maps each fleet-wide arrival to
 a target cluster *before* ``admit_sequential`` runs there (arrivals no
 cluster would take are counted as rejected-by-all). A one-cluster fleet
 reproduces the single-cluster simulator key-for-key: cluster 0 keeps the
-undiverted per-step key chain and the per-cluster step helpers are exactly
-the single-cluster code path.
+undiverted per-step key chain and the core functions are exactly the
+single-cluster code path.
 """
 from __future__ import annotations
 
@@ -50,186 +57,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.belief import (GammaBelief, apply_pseudo_observations,
-                           belief_from_prior, observe_initial_size,
-                           update_on_events)
-from ..core.moments import (MomentCurves, aggregate_moment_curves,
-                            moment_curves, moment_curves_fused)
-from ..core.policies import ZEROTH, PolicyParams, admit_sequential
-from ..core.pricing import mixture_moments
-from ..core.processes import (DeploymentParams, PopulationPriors,
-                              sample_params, sample_pseudo_observations,
-                              sample_step_events)
+from ..core.policies import PolicyParams
+# Static configuration, arrival streams, and the admission-core layer all
+# live in sim.core; everything historically importable from this module is
+# re-exported here (and from sim/__init__) unchanged.
+from .core import (AGG_FUSED, AGG_KERNEL, AGG_REFERENCE, GLOBAL, MIX_LABELED,
+                   MIX_UNLABELED, PSEUDO, AdmissionCore, ArrivalSource,
+                   ArrivalStream, CoreState, FleetConfig, PriorArrivalSource,
+                   SimConfig, SimState, StepOutcome, _init_state,
+                   _place_arrivals, _step_dynamics, _validate_config,
+                   _validate_fleet_config, draw_arrival_stream,
+                   make_admission_core, make_config, make_fleet_config,
+                   stream_config)
 
-GLOBAL, PSEUDO, MIX_LABELED, MIX_UNLABELED = "global", "pseudo", "labeled", "unlabeled"
-AGG_FUSED, AGG_REFERENCE, AGG_KERNEL = "fused", "reference", "kernel"
-
-
-class SimConfig(NamedTuple):
-    """Static simulation configuration (python values; changing any re-jits)."""
-
-    capacity: float = 2_000.0
-    arrival_rate: float = 0.1        # deployments/hour (paper: 1.0 at c=20,000)
-    horizon_hours: float = 365 * 24.0
-    dt: float = 6.0                  # hours per step
-    max_slots: int = 1024
-    max_arrivals: int = 4            # cap per step (Poisson tail clipped)
-    prior_mode: str = GLOBAL         # GLOBAL | PSEUDO | MIX_LABELED | MIX_UNLABELED
-    n_pseudo_obs: int = 0            # paper §6: 0/1/5/50
-    d_points: int = 24               # D-term checkpoint count
-    use_kernel: bool = False         # Pallas moment_curves kernel (TPU path;
-                                     # interpret-mode on CPU, so off by default)
-    agg_backend: str = AGG_FUSED     # AGG_FUSED | AGG_REFERENCE | AGG_KERNEL:
-                                     # how the cluster-wide aggregate curves
-                                     # are computed each step (see make_run)
-    agg_refresh_steps: int = 1       # full aggregate recompute every K steps;
-                                     # between refreshes admitted candidates'
-                                     # curves are folded in incrementally
-                                     # (K=1: recompute every step)
-    priors: PopulationPriors = None  # population priors; prefer make_config,
-                                     # which defaults these to AZURE_PRIORS
-
-    @property
-    def n_steps(self) -> int:
-        return int(round(self.horizon_hours / self.dt))
-
-
-def make_config(**overrides) -> SimConfig:
-    """Documented SimConfig constructor: ``priors`` defaults to the fitted
-    Azure priors instead of ``None`` and every field is validated eagerly, so
-    a bad config fails here rather than deep inside ``belief_from_prior``."""
-    if overrides.get("priors") is None:
-        from ..core import AZURE_PRIORS
-
-        overrides["priors"] = AZURE_PRIORS
-    return _validate_config(SimConfig(**overrides))
-
-
-def _validate_config(cfg: SimConfig) -> SimConfig:
-    if cfg.priors is None:
-        raise ValueError(
-            "SimConfig.priors is None. Construct configs via "
-            "repro.sim.make_config(...) (defaults to AZURE_PRIORS) or pass "
-            "priors=<PopulationPriors> explicitly."
-        )
-    if cfg.prior_mode not in (GLOBAL, PSEUDO, MIX_LABELED, MIX_UNLABELED):
-        raise ValueError(f"unknown prior_mode {cfg.prior_mode!r}")
-    if cfg.agg_backend not in (AGG_FUSED, AGG_REFERENCE, AGG_KERNEL):
-        raise ValueError(f"unknown agg_backend {cfg.agg_backend!r}")
-    if cfg.n_pseudo_obs < 0:
-        raise ValueError(f"n_pseudo_obs={cfg.n_pseudo_obs} must be >= 0")
-    if cfg.prior_mode != GLOBAL and cfg.n_pseudo_obs == 0:
-        raise ValueError(
-            f"prior_mode={cfg.prior_mode!r} with n_pseudo_obs=0 silently "
-            "degenerates to GLOBAL (zero pseudo observations leave every "
-            "belief — including the §7 mixture components — at the "
-            "population prior): use prior_mode=GLOBAL, or set "
-            "n_pseudo_obs >= 1"
-        )
-    if cfg.n_steps <= 0 or cfg.max_slots <= 0 or cfg.max_arrivals <= 0:
-        raise ValueError(
-            f"degenerate SimConfig: n_steps={cfg.n_steps} "
-            f"max_slots={cfg.max_slots} max_arrivals={cfg.max_arrivals}"
-        )
-    if cfg.agg_refresh_steps < 1 or cfg.n_steps % cfg.agg_refresh_steps:
-        raise ValueError(
-            f"agg_refresh_steps={cfg.agg_refresh_steps} must be >= 1 and "
-            f"divide n_steps={cfg.n_steps}"
-        )
-    return cfg
-
-
-class FleetConfig(NamedTuple):
-    """Static fleet configuration: a per-cluster ``SimConfig`` template plus
-    the per-cluster capacities.
-
-    ``base`` describes each cluster's slot array, step size, information
-    model, and aggregate-refresh blocking — *and* the fleet-wide arrival
-    process (``arrival_rate``/``max_arrivals`` are the whole fleet's: one
-    stream is drawn and routed, not one per cluster). ``base.capacity``
-    conventionally holds the fleet total (``make_fleet_config`` sets it);
-    the authoritative per-cluster capacities are ``capacities``.
-    """
-
-    base: SimConfig
-    capacities: tuple                # per-cluster core capacities (static)
-
-    @property
-    def n_clusters(self) -> int:
-        return len(self.capacities)
-
-    @property
-    def total_capacity(self) -> float:
-        return float(sum(self.capacities))
-
-
-def make_fleet_config(capacities, **base_overrides) -> FleetConfig:
-    """Documented FleetConfig constructor: ``base_overrides`` build the
-    per-cluster template through ``make_config`` (so priors default to
-    AZURE_PRIORS and every field is validated); ``base.capacity`` defaults
-    to the fleet total."""
-    caps = tuple(float(c) for c in capacities)
-    base_overrides.setdefault("capacity", sum(caps))
-    return _validate_fleet_config(
-        FleetConfig(base=make_config(**base_overrides), capacities=caps))
-
-
-def _validate_fleet_config(fcfg: FleetConfig) -> FleetConfig:
-    if not fcfg.capacities:
-        raise ValueError("FleetConfig.capacities is empty")
-    if any(not np.isfinite(c) or c <= 0.0 for c in fcfg.capacities):
-        raise ValueError(
-            f"FleetConfig.capacities must be positive, got {fcfg.capacities}")
-    _validate_config(fcfg.base)
-    return fcfg
-
-
-def stream_config(cfg) -> SimConfig:
-    """The ``SimConfig`` governing arrival-stream layout and priors.
-
-    Identity for a plain ``SimConfig``; for a ``FleetConfig`` it is the base
-    template with the fleet-total capacity — fleet arrivals are drawn (or
-    replayed) fleet-wide and only routed to clusters at simulation time, so
-    everything stream-shaped (``draw_arrival_stream``, trace replay, badness
-    measures) works on this reduced config.
-    """
-    if isinstance(cfg, FleetConfig):
-        return cfg.base._replace(capacity=cfg.total_capacity)
-    return cfg
-
-
-class ArrivalStream(NamedTuple):
-    """Pre-drawn per-(step, arrival-slot) quantities. Leading dims [T, A]."""
-
-    params: DeploymentParams         # true parameters of the arriving deployment
-    c0: jax.Array                    # initial request size
-    bel: GammaBelief                 # provider's prior belief for the arrival
-    bel_alt: GammaBelief             # second mixture component (unlabeled mode)
-    n_arrivals: jax.Array            # [T] arrivals per step (already capped)
-
-
-class ArrivalSource:
-    """Pluggable producer of the pre-drawn ``ArrivalStream``.
-
-    ``make_run`` consumes arrivals exclusively through this interface: the
-    scan body, policies, and importance sampling only ever see the stream,
-    so any source that returns correctly-shaped ``[n_steps, max_arrivals]``
-    fields plugs in without touching the simulator. Two backends ship:
-    ``PriorArrivalSource`` (sample the population priors — the seed
-    behavior) and ``traces.replay.TraceArrivalSource`` (replay a recorded
-    ``WorkloadTrace``). ``stream`` is called inside the jitted run, so it
-    must be traceable; closed-over trace arrays become constants.
-    """
-
-    def stream(self, key: jax.Array, cfg: SimConfig) -> "ArrivalStream":
-        raise NotImplementedError
-
-
-class PriorArrivalSource(ArrivalSource):
-    """Draw every arrival from the population priors (paper §5 default)."""
-
-    def stream(self, key: jax.Array, cfg: SimConfig) -> "ArrivalStream":
-        return draw_arrival_stream(key, cfg)
+__all__ = [  # noqa: F822 — re-exports keep the historical import surface
+    "AGG_FUSED", "AGG_KERNEL", "AGG_REFERENCE", "GLOBAL", "MIX_LABELED",
+    "MIX_UNLABELED", "PSEUDO", "AdmissionCore", "ArrivalSource",
+    "ArrivalStream", "CoreState", "FleetConfig", "FleetMetrics",
+    "PriorArrivalSource", "RunMetrics", "SimConfig", "SimState",
+    "StepOutcome", "broadcast_policy", "draw_arrival_stream",
+    "make_admission_core", "make_config", "make_fleet_config",
+    "make_fleet_run", "make_run", "run_batch", "run_keyed_batch",
+    "shard_batch_over_devices", "stream_config",
+]
 
 
 class RunMetrics(NamedTuple):
@@ -272,259 +122,82 @@ class FleetMetrics(NamedTuple):
     per_cluster: RunMetrics       # leading [C] axis on every field
 
 
-class SimState(NamedTuple):
-    alive: jax.Array              # [S] bool
-    cores: jax.Array              # [S] float32
-    params: DeploymentParams      # [S]
-    bel: GammaBelief              # [S]
-    core_hours: jax.Array
-    fail_requests: jax.Array
-    total_requests: jax.Array
-    arr_accepted: jax.Array
-    arr_rejected: jax.Array
-    slot_overflow: jax.Array
-    n_departed: jax.Array
-
-
-def draw_arrival_stream(key: jax.Array, cfg: SimConfig) -> ArrivalStream:
-    """Pre-draw every arrival's true params, request size and prior belief."""
-    cfg = stream_config(cfg)
-    t_steps, a_max = cfg.n_steps, cfg.max_arrivals
-    shape = (t_steps, a_max)
-    kn, kp, kc, ko, kq, kb = jax.random.split(key, 6)
-    n_arr = jnp.minimum(
-        jax.random.poisson(kn, cfg.arrival_rate * cfg.dt, (t_steps,)), a_max
-    )
-    params = sample_params(kp, cfg.priors, shape)
-    c0 = (1 + jax.random.poisson(kc, params.sig)).astype(jnp.float32)
-
-    prior = belief_from_prior(cfg.priors, shape)
-    if cfg.prior_mode == GLOBAL:
-        bel = prior
-        bel_alt = bel
-    elif cfg.prior_mode == PSEUDO:
-        obs = sample_pseudo_observations(ko, params, cfg.priors, cfg.n_pseudo_obs)
-        bel = apply_pseudo_observations(prior, obs, cfg.priors)
-        bel_alt = bel
-    else:
-        # §7: the user has two types; the submitted deployment is the drawn
-        # ``params``; the alternative type is an independent draw. The provider
-        # holds n_pseudo_obs observations of each type.
-        alt = sample_params(kq, cfg.priors, shape)
-        k1, k2 = jax.random.split(kb)
-        obs = sample_pseudo_observations(k1, params, cfg.priors, cfg.n_pseudo_obs)
-        obs_alt = sample_pseudo_observations(k2, alt, cfg.priors, cfg.n_pseudo_obs)
-        bel = apply_pseudo_observations(prior, obs, cfg.priors)
-        bel_alt = apply_pseudo_observations(prior, obs_alt, cfg.priors)
-    bel = observe_initial_size(bel, c0)
-    return ArrivalStream(params=params, c0=c0, bel=bel, bel_alt=bel_alt,
-                         n_arrivals=n_arr)
-
-
-def _init_state(cfg: SimConfig) -> SimState:
-    s = cfg.max_slots
-    zero_params = DeploymentParams(
-        lam=jnp.zeros(s), mu=jnp.full((s,), 1.0), sig=jnp.zeros(s)
-    )
-    return SimState(
-        alive=jnp.zeros(s, bool),
-        cores=jnp.zeros(s, jnp.float32),
-        params=zero_params,
-        bel=belief_from_prior(cfg.priors, (s,)),
-        core_hours=jnp.zeros(()),
-        fail_requests=jnp.zeros(()),
-        total_requests=jnp.zeros(()),
-        arr_accepted=jnp.zeros(()),
-        arr_rejected=jnp.zeros(()),
-        slot_overflow=jnp.zeros(()),
-        n_departed=jnp.zeros(()),
+def _run_metrics(cfg: SimConfig, slots: SimState, util_trace, fail_trace,
+                 capacity=None, horizon_hours=None) -> RunMetrics:
+    """Assemble ``RunMetrics`` from final slot-table accumulators. Shared by
+    the offline scan driver and the online engine, so "final metrics" means
+    the same arithmetic in both regimes."""
+    cap = cfg.capacity if capacity is None else capacity
+    horizon = cfg.horizon_hours if horizon_hours is None else horizon_hours
+    return RunMetrics(
+        utilization=slots.core_hours / (horizon * cap),
+        failure_rate=slots.fail_requests
+        / jnp.maximum(slots.total_requests, 1.0),
+        total_requests=slots.total_requests,
+        failed_requests=slots.fail_requests,
+        arrivals_accepted=slots.arr_accepted,
+        arrivals_rejected=slots.arr_rejected,
+        slot_overflow=slots.slot_overflow,
+        n_departed=slots.n_departed,
+        alive_end=jnp.sum(slots.alive.astype(jnp.float32), axis=-1),
+        util_trace=util_trace,
+        fail_trace=fail_trace,
     )
 
 
-def _place_arrivals(state: SimState, accept, stream_t: ArrivalStream, cfg: SimConfig):
-    """Place accepted arrivals into free slots, one vectorized pass.
-
-    The i-th accepted arrival goes to the i-th free slot (in slot order) —
-    identical semantics to the previous sequential argmin unroll, but a single
-    [A, S] rank-match instead of A passes over the slot array. Accepted
-    arrivals beyond the number of free slots are counted as slot overflow.
-
-    Returns (state, placed_arrival [A]) — the mask of accepted arrivals that
-    actually landed in a slot, so the caller folds only *real* deployments
-    into the maintained aggregate (overflowed arrivals must not haunt it).
-    """
-    alive = state.alive
-    free = ~alive
-    rank = jnp.cumsum(free.astype(jnp.int32))          # free-slot rank, 1-based
-    acc = accept.astype(jnp.int32)
-    ordinal = jnp.cumsum(acc) * acc                    # i-th accepted, 1-based
-    n_free = rank[-1]
-    placed_arrival = accept & (ordinal <= n_free)      # [A]
-    overflow = state.slot_overflow + jnp.sum(
-        jnp.where(accept & ~placed_arrival, 1.0, 0.0))
-
-    hit = free[None, :] & (rank[None, :] == ordinal[:, None]) & accept[:, None]
-    placed = jnp.any(hit, axis=0)                      # [S]
-
-    def merge(old, new_a):
-        upd = hit.astype(old.dtype).T @ new_a
-        return jnp.where(placed, upd, old)
-
-    cores = merge(state.cores, stream_t.c0)
-    params = jax.tree.map(lambda o, n: merge(o, n), state.params,
-                          stream_t.params)
-    bel = jax.tree.map(lambda o, n: merge(o, n), state.bel, stream_t.bel)
-    state = state._replace(alive=alive | placed, cores=cores, params=params,
-                           bel=bel, slot_overflow=overflow)
-    return state, placed_arrival
-
-
-def _make_aggregate_fn(cfg: SimConfig, grid: jax.Array):
-    """Cluster-wide sum-over-alive-slots curve evaluator, by backend.
-
-    AGG_REFERENCE is the seed per-slot path (materialize [S, N], mask, sum) —
-    kept as the oracle the fast paths are equivalence-tested against.
-    AGG_FUSED reduces block-by-block without the [S, N] intermediate;
-    AGG_KERNEL is the Pallas aggregated-output kernel (interpret-mode on CPU).
-    """
-    if cfg.agg_backend == AGG_REFERENCE:
-
-        def aggregate(bel, cores, alive):
-            curves = moment_curves(bel, cores, grid, cfg.priors,
-                                   d_points=cfg.d_points)
-            alive_f = alive.astype(jnp.float32)
-            return (jnp.sum(curves.EL * alive_f[:, None], axis=0),
-                    jnp.sum(curves.VL * alive_f[:, None], axis=0))
-    elif cfg.agg_backend == AGG_KERNEL:
-        from ..kernels.moment_curves.ops import aggregate_moment_curves_kernel
-
-        def aggregate(bel, cores, alive):
-            out = aggregate_moment_curves_kernel(
-                bel, cores, alive, grid, cfg.priors, d_points=cfg.d_points)
-            return out.EL, out.VL
-    else:
-
-        def aggregate(bel, cores, alive):
-            out = aggregate_moment_curves(bel, cores, alive, grid, cfg.priors,
-                                          d_points=cfg.d_points)
-            return out.EL, out.VL
-
-    return aggregate
-
-
-def _make_curves_fn(cfg: SimConfig):
-    """Per-candidate moment-curve evaluator (fused jnp or Pallas kernel)."""
-    if cfg.use_kernel:
-        from ..kernels.moment_curves.ops import moment_curves_kernel
-
-        def curves_fn(bel, cores, grid_, priors, d_points):
-            flat_bel = jax.tree.map(lambda a: a.reshape(-1), bel)
-            out = moment_curves_kernel(flat_bel, cores.reshape(-1), grid_,
-                                       priors, d_points=d_points)
-            shape = cores.shape + (grid_.shape[0],)
-            return MomentCurves(out.EL.reshape(shape), out.VL.reshape(shape))
-
-        return curves_fn
-    return moment_curves_fused
-
-
-def _make_candidates_fn(cfg: SimConfig, grid: jax.Array, needs_moments: bool,
-                        n_grid: int, curves_fn):
-    """[A, N] candidate curves for one step's pre-drawn arrivals (mixture
-    moments in the §7 unlabeled mode; zeros when the policy ignores them)."""
-
-    def candidates(stream_t: ArrivalStream) -> MomentCurves:
-        if not needs_moments:
-            return MomentCurves(EL=jnp.zeros((cfg.max_arrivals, n_grid)),
-                                VL=jnp.zeros((cfg.max_arrivals, n_grid)))
-        cand = curves_fn(stream_t.bel, stream_t.c0, grid, cfg.priors,
-                         d_points=cfg.d_points)
-        if cfg.prior_mode == MIX_UNLABELED:
-            cand_alt = curves_fn(stream_t.bel_alt, stream_t.c0, grid,
-                                 cfg.priors, d_points=cfg.d_points)
-            stacked = MomentCurves(
-                EL=jnp.stack([cand.EL, cand_alt.EL]),
-                VL=jnp.stack([cand.VL, cand_alt.VL]),
-            )
-            cand = mixture_moments(jnp.asarray([0.5, 0.5]), stacked)
-        return cand
-
-    return candidates
-
-
-def _step_dynamics(cfg: SimConfig, capacity, key, state: SimState):
-    """Steps 1–3 of one ``dt``-hour step for ONE cluster: deaths, scale-out
-    grants against ``capacity`` (a traced value — the fleet passes each
-    cluster's own), and conjugate belief updates.
-
-    Returns ``(state, util, failed, n_req_total, departed)`` with the slot
-    arrays updated and the metric counters untouched (the caller accumulates
-    them after admission).
-    """
-    alive_f = state.alive.astype(jnp.float32)
-
-    # 1. deaths ---------------------------------------------------------
-    ev = sample_step_events(key, state.params, state.cores, cfg.priors,
-                            cfg.dt, alive=state.alive)
-    deaths = jnp.minimum(ev.core_deaths.astype(jnp.float32), state.cores) * alive_f
-    exposure = state.cores * cfg.dt * alive_f
-    cores = state.cores - deaths
-    cores = jnp.where(ev.spont_death & state.alive, 0.0, cores)
-    alive = state.alive & (cores > 0.0)
-    departed = jnp.sum((state.alive & ~alive).astype(jnp.float32))
-    alive_f = alive.astype(jnp.float32)
-
-    # 2. scale-outs (only deployments still alive request) ---------------
-    req = ev.scaleout_cores.astype(jnp.float32) * alive_f
-    n_req = ev.n_scaleouts.astype(jnp.float32) * alive_f
-    util = jnp.sum(cores * alive_f)
-    grant = (util + jnp.cumsum(req)) <= capacity
-    cores = cores + jnp.where(grant, req, 0.0)
-    failed = jnp.sum(jnp.where(~grant, n_req, 0.0))
-    util = jnp.sum(cores * alive_f)
-
-    # 3. belief updates (requests are observed whether or not granted) ---
-    bel = update_on_events(
-        state.bel,
-        core_deaths=deaths,
-        exposure_core_hours=exposure,
-        n_scaleouts=n_req,
-        scaleout_cores=req,
-        alive_hours=cfg.dt * alive_f,
-        priors=cfg.priors,
+def _fleet_metrics(cfg: SimConfig, caps, state: SimState, util_trace,
+                   fail_trace, rej_all, horizon_hours=None) -> FleetMetrics:
+    """Assemble ``FleetMetrics`` from per-cluster slot-table accumulators
+    (leading ``[C]`` axis; ``util_trace``/``fail_trace`` are ``[C, T]``).
+    Shared by the offline fleet scan driver and the online engine."""
+    horizon = cfg.horizon_hours if horizon_hours is None else horizon_hours
+    per_cluster = _run_metrics(cfg, state, util_trace, fail_trace,
+                               capacity=caps, horizon_hours=horizon)
+    tot_req = jnp.sum(state.total_requests)
+    tot_fail = jnp.sum(state.fail_requests)
+    return FleetMetrics(
+        utilization=jnp.sum(state.core_hours) / (horizon * jnp.sum(caps)),
+        failure_rate=tot_fail / jnp.maximum(tot_req, 1.0),
+        total_requests=tot_req,
+        failed_requests=tot_fail,
+        arrivals_accepted=jnp.sum(state.arr_accepted),
+        arrivals_rejected=jnp.sum(state.arr_rejected) + rej_all,
+        rejected_by_all=rej_all,
+        slot_overflow=jnp.sum(state.slot_overflow),
+        util_trace=jnp.sum(util_trace, axis=0),
+        fail_trace=jnp.sum(fail_trace, axis=0),
+        per_cluster=per_cluster,
     )
-    state = state._replace(alive=alive, cores=cores, bel=bel)
-    return state, util, failed, jnp.sum(n_req), departed
 
 
-def _admit_place_fold(cfg: SimConfig, policy: PolicyParams, state: SimState,
-                      agg_el, agg_vl, util, cand: MomentCurves,
-                      stream_t: ArrivalStream, valid):
-    """Step 4 for ONE cluster: sequential admission of the (cluster-masked)
-    candidates against the maintained aggregate, slot placement, and the
-    incremental aggregate fold of *placed* arrivals.
-
-    Folds only arrivals that actually landed in a slot into the carried
-    aggregate — accepted-but-overflowed ones never became deployments (the
-    seed's per-step recompute likewise only ever saw placed slots).
-    """
-    res = admit_sequential(policy, agg_el, agg_vl, util, cand,
-                           stream_t.c0, valid)
-    state, placed_arrival = _place_arrivals(state, res.accept, stream_t, cfg)
-    placed_f = placed_arrival.astype(jnp.float32)
-    agg_el = agg_el + jnp.einsum("an,a->n", cand.EL, placed_f)
-    agg_vl = agg_vl + jnp.einsum("an,a->n", cand.VL, placed_f)
-    return state, agg_el, agg_vl, res.accept
+def _accumulate_step(slots: SimState, out: StepOutcome, n_acc, n_rej,
+                     dt: float):
+    """Fold one step's outcome into the slot-table metric accumulators;
+    returns (slots, util_end). Identical arithmetic for the offline scan and
+    the online engine's end-of-step bookkeeping."""
+    util_end = jnp.sum(slots.cores * slots.alive.astype(jnp.float32), axis=-1)
+    slots = slots._replace(
+        core_hours=slots.core_hours + util_end * dt,
+        fail_requests=slots.fail_requests + out.failed,
+        total_requests=slots.total_requests + out.n_requests,
+        arr_accepted=slots.arr_accepted + n_acc,
+        arr_rejected=slots.arr_rejected + n_rej,
+        n_departed=slots.n_departed + out.departed,
+    )
+    return slots, util_end
 
 
 def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int,
-             arrival_source: ArrivalSource | None = None):
+             arrival_source: ArrivalSource | None = None,
+             record_decisions: bool = False):
     """Build the jitted simulator for a fixed policy *kind* (threshold/rho stay
     traced so tuning does not re-jit). Returns run(key, policy) -> RunMetrics.
 
     ``arrival_source`` selects where arrivals come from (default: sample the
     population priors); an explicit ``stream`` argument to run() still takes
-    precedence over the source.
+    precedence over the source. With ``record_decisions=True`` the run
+    returns ``(RunMetrics, accept [T, A])`` — the per-step admit/reject
+    decisions, which is what the online/offline equivalence tests compare.
 
     The scan is blocked by ``cfg.agg_refresh_steps`` (= K): the cluster-wide
     aggregate moment curves are fully recomputed from the slot array once per
@@ -541,81 +214,54 @@ def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int,
     every step (the refresh then lags the seed's in-step recompute by
     exactly the current step's death/belief update).
     """
-    _validate_config(cfg)
+    core = make_admission_core(cfg, horizon_grid, policy_kind)
     source = PriorArrivalSource() if arrival_source is None else arrival_source
-    needs_moments = policy_kind != ZEROTH
-    grid = horizon_grid
-    n_grid = grid.shape[0] if needs_moments else 1
     k_refresh = cfg.agg_refresh_steps
     n_outer = cfg.n_steps // k_refresh
-    curves_fn = _make_curves_fn(cfg)
-    aggregate_fn = _make_aggregate_fn(cfg, grid)
-    candidates_fn = _make_candidates_fn(cfg, grid, needs_moments, n_grid,
-                                        curves_fn)
 
-    def step(policy: PolicyParams, carry, xs):
-        state, agg_el, agg_vl = carry
+    def step(policy: PolicyParams, cs: CoreState, xs):
         key, stream_t = xs
-        state, util, failed, n_req_total, departed = _step_dynamics(
-            cfg, cfg.capacity, key, state)
+        cs, out = core.apply_events(key, cs)
 
         # 4. arrivals, admitted against the maintained aggregate -------------
         valid = jnp.arange(cfg.max_arrivals) < stream_t.n_arrivals
-        cand = candidates_fn(stream_t)
-        state, agg_el, agg_vl, accept = _admit_place_fold(
-            cfg, policy, state, agg_el, agg_vl, util, cand, stream_t, valid)
+        cand = core.candidates(stream_t)
+        cs, accept = core.decide_batch(policy, cs, out.util, cand, stream_t,
+                                       valid)
 
         n_acc = jnp.sum(accept.astype(jnp.float32))
         n_rej = jnp.sum(valid.astype(jnp.float32)) - n_acc
-        util_end = jnp.sum(state.cores * state.alive.astype(jnp.float32))
-        state = state._replace(
-            core_hours=state.core_hours + util_end * cfg.dt,
-            fail_requests=state.fail_requests + failed,
-            total_requests=state.total_requests + n_req_total,
-            arr_accepted=state.arr_accepted + n_acc,
-            arr_rejected=state.arr_rejected + n_rej,
-            n_departed=state.n_departed + departed,
-        )
-        return (state, agg_el, agg_vl), (util_end, failed)
+        slots, util_end = _accumulate_step(cs.slots, out, n_acc, n_rej, cfg.dt)
+        traces = (util_end, out.failed, accept) if record_decisions \
+            else (util_end, out.failed)
+        return cs._replace(slots=slots), traces
 
-    def outer_block(policy: PolicyParams, state: SimState, xs_block):
+    def outer_block(policy: PolicyParams, cs: CoreState, xs_block):
         # full refresh of the aggregate from the slot array, once per block
-        if needs_moments:
-            agg_el, agg_vl = aggregate_fn(state.bel, state.cores, state.alive)
-        else:
-            agg_el = jnp.zeros((n_grid,))
-            agg_vl = jnp.zeros((n_grid,))
-        (state, _, _), traces = jax.lax.scan(
-            functools.partial(step, policy), (state, agg_el, agg_vl), xs_block
-        )
-        return state, traces
+        cs = core.refresh_aggregates(cs)
+        return jax.lax.scan(functools.partial(step, policy), cs, xs_block)
 
     @functools.partial(jax.jit, static_argnames=())
     def run(key: jax.Array, policy: PolicyParams,
-            stream: Optional[ArrivalStream] = None) -> RunMetrics:
+            stream: Optional[ArrivalStream] = None):
         k_stream, k_scan = jax.random.split(key)
         if stream is None:
             stream = source.stream(k_stream, cfg)
         keys = jax.random.split(k_scan, cfg.n_steps)
-        state0 = _init_state(cfg)
+        cs0 = core.init()
         block = lambda x: x.reshape((n_outer, k_refresh) + x.shape[1:])
         xs = jax.tree.map(block, (keys, stream))
-        state, (util_trace, fail_trace) = jax.lax.scan(
-            functools.partial(outer_block, policy), state0, xs
+        cs, traces = jax.lax.scan(
+            functools.partial(outer_block, policy), cs0, xs
         )
-        return RunMetrics(
-            utilization=state.core_hours / (cfg.horizon_hours * cfg.capacity),
-            failure_rate=state.fail_requests / jnp.maximum(state.total_requests, 1.0),
-            total_requests=state.total_requests,
-            failed_requests=state.fail_requests,
-            arrivals_accepted=state.arr_accepted,
-            arrivals_rejected=state.arr_rejected,
-            slot_overflow=state.slot_overflow,
-            n_departed=state.n_departed,
-            alive_end=jnp.sum(state.alive.astype(jnp.float32)),
-            util_trace=util_trace.reshape(cfg.n_steps),
-            fail_trace=fail_trace.reshape(cfg.n_steps),
-        )
+        util_trace, fail_trace = traces[0], traces[1]
+        metrics = _run_metrics(cfg, cs.slots,
+                               util_trace.reshape(cfg.n_steps),
+                               fail_trace.reshape(cfg.n_steps))
+        if record_decisions:
+            accept = traces[2].reshape(cfg.n_steps, cfg.max_arrivals)
+            return metrics, accept
+        return metrics
 
     return run
 
@@ -684,7 +330,8 @@ def broadcast_policy(policy: PolicyParams, n_clusters: int) -> PolicyParams:
 
 def make_fleet_run(fcfg: FleetConfig, horizon_grid: jax.Array,
                    policy_kind: int, router=None,
-                   arrival_source: ArrivalSource | None = None):
+                   arrival_source: ArrivalSource | None = None,
+                   record_decisions: bool = False):
     """Build the jitted fleet simulator: route, then admit per cluster.
 
     Returns ``run(key, policy, stream=None) -> FleetMetrics``. ``policy``
@@ -693,55 +340,51 @@ def make_fleet_run(fcfg: FleetConfig, horizon_grid: jax.Array,
     every cluster via ``broadcast_policy``, which is only meaningful for a
     homogeneous fleet — ``run`` fails fast when the policy's capacity does
     not match ``FleetConfig.capacities`` per cluster (a tiled fleet-total
-    would let every cluster admit against the whole fleet's budget).
+    would let every cluster admit against the whole fleet's budget). With
+    ``record_decisions=True`` the run returns ``(FleetMetrics,
+    accept [T, C, A], assign [T, A])``.
 
-    Each step: per-cluster dynamics (deaths / scale-out grants against the
-    cluster's own capacity / belief updates, vmapped over the cluster axis
-    with independent key chains), one shared candidate-curve evaluation for
-    the step's fleet-wide arrivals, the ``router``'s cluster assignment from
-    the per-cluster maintained aggregates, then per-cluster
-    ``admit_sequential`` + slot placement + incremental aggregate fold on
-    each cluster's assigned arrivals. The blocked ``agg_refresh_steps``
-    refresh recomputes every cluster's aggregate from its own slot array
-    once per block. Arrivals the router maps to the sentinel ``C`` (the
-    threshold cascade's "no cluster would take it") are counted as
-    ``rejected_by_all`` and enter no cluster's admission scan.
+    Each step: per-cluster dynamics (the core's ``apply_events`` against the
+    cluster's own capacity, vmapped over the cluster axis with independent
+    key chains), one shared candidate-curve evaluation for the step's
+    fleet-wide arrivals, the ``router``'s cluster assignment from the
+    per-cluster maintained aggregates, then the core's per-cluster
+    ``decide_batch`` (sequential admission + slot placement + incremental
+    aggregate fold) on each cluster's assigned arrivals. The blocked
+    ``agg_refresh_steps`` refresh recomputes every cluster's aggregate from
+    its own slot array once per block. Arrivals the router maps to the
+    sentinel ``C`` (the threshold cascade's "no cluster would take it") are
+    counted as ``rejected_by_all`` and enter no cluster's admission scan.
     """
     from .routing import LeastUtilizedRouter
 
     _validate_fleet_config(fcfg)
     cfg = fcfg.base
+    core = make_admission_core(cfg, horizon_grid, policy_kind)
     n_c = fcfg.n_clusters
     caps = jnp.asarray(fcfg.capacities, jnp.float32)
     router = LeastUtilizedRouter() if router is None else router
     source = PriorArrivalSource() if arrival_source is None else arrival_source
-    needs_moments = policy_kind != ZEROTH
-    grid = horizon_grid
-    n_grid = grid.shape[0] if needs_moments else 1
     k_refresh = cfg.agg_refresh_steps
     n_outer = cfg.n_steps // k_refresh
-    curves_fn = _make_curves_fn(cfg)
-    aggregate_fn = _make_aggregate_fn(cfg, grid)
-    candidates_fn = _make_candidates_fn(cfg, grid, needs_moments, n_grid,
-                                        curves_fn)
 
     def fleet_step(policy: PolicyParams, carry, xs):
-        state, agg_el, agg_vl, rej_all = carry      # [C, ...] everywhere
+        cs, rej_all = carry                          # cs leaves: [C, ...]
         key, stream_t = xs
         keys_c = _cluster_step_keys(key, n_c)
-        state, util, failed, n_req_total, departed = jax.vmap(
-            lambda cap, k, st: _step_dynamics(cfg, cap, k, st))(
-                caps, keys_c, state)
+        cs, out = jax.vmap(
+            lambda cap, k, cs_c: core.apply_events(k, cs_c, cap))(
+                caps, keys_c, cs)
 
         valid = jnp.arange(cfg.max_arrivals) < stream_t.n_arrivals
-        cand = candidates_fn(stream_t)
+        cand = core.candidates(stream_t)
 
         from .routing import RouteContext
 
         assign = router.route(
             jax.random.fold_in(key, n_c),
             RouteContext(cand=cand, c0=stream_t.c0, valid=valid,
-                         agg_el=agg_el, agg_vl=agg_vl, util=util,
+                         agg_el=cs.agg_el, agg_vl=cs.agg_vl, util=out.util,
                          capacities=caps, policy=policy))
         assign = jnp.clip(assign, 0, n_c)           # sentinel n_c = nowhere
         cluster_mask = valid[None, :] & (
@@ -749,91 +392,53 @@ def make_fleet_run(fcfg: FleetConfig, horizon_grid: jax.Array,
         rej_all = rej_all + jnp.sum(
             (valid & (assign == n_c)).astype(jnp.float32))
 
-        state, agg_el, agg_vl, accept = jax.vmap(
-            lambda pol_c, st_c, el_c, vl_c, u_c, valid_c: _admit_place_fold(
-                cfg, pol_c, st_c, el_c, vl_c, u_c, cand, stream_t, valid_c))(
-                    policy, state, agg_el, agg_vl, util, cluster_mask)
+        cs, accept = jax.vmap(
+            lambda pol_c, cs_c, u_c, valid_c: core.decide_batch(
+                pol_c, cs_c, u_c, cand, stream_t, valid_c))(
+                    policy, cs, out.util, cluster_mask)
 
         n_acc = jnp.sum(accept.astype(jnp.float32), axis=1)          # [C]
         n_rej = jnp.sum(cluster_mask.astype(jnp.float32), axis=1) - n_acc
-        util_end = jnp.sum(
-            state.cores * state.alive.astype(jnp.float32), axis=1)   # [C]
-        state = state._replace(
-            core_hours=state.core_hours + util_end * cfg.dt,
-            fail_requests=state.fail_requests + failed,
-            total_requests=state.total_requests + n_req_total,
-            arr_accepted=state.arr_accepted + n_acc,
-            arr_rejected=state.arr_rejected + n_rej,
-            n_departed=state.n_departed + departed,
-        )
-        return (state, agg_el, agg_vl, rej_all), (util_end, failed)
+        slots, util_end = _accumulate_step(cs.slots, out, n_acc, n_rej, cfg.dt)
+        traces = (util_end, out.failed, accept, assign) if record_decisions \
+            else (util_end, out.failed)
+        return (cs._replace(slots=slots), rej_all), traces
 
     def outer_block(policy: PolicyParams, carry, xs_block):
-        state, rej_all = carry
+        cs, rej_all = carry
         # full per-cluster refresh of the aggregates, once per block
-        if needs_moments:
-            agg_el, agg_vl = jax.vmap(aggregate_fn)(state.bel, state.cores,
-                                                    state.alive)
-        else:
-            agg_el = jnp.zeros((n_c, n_grid))
-            agg_vl = jnp.zeros((n_c, n_grid))
-        (state, _, _, rej_all), traces = jax.lax.scan(
-            functools.partial(fleet_step, policy),
-            (state, agg_el, agg_vl, rej_all), xs_block
-        )
-        return (state, rej_all), traces
+        cs = jax.vmap(core.refresh_aggregates)(cs)
+        return jax.lax.scan(functools.partial(fleet_step, policy),
+                            (cs, rej_all), xs_block)
 
     @functools.partial(jax.jit, static_argnames=())
     def _sim_run(key: jax.Array, policy: PolicyParams,
-                 stream: Optional[ArrivalStream] = None) -> FleetMetrics:
+                 stream: Optional[ArrivalStream] = None):
         policy = broadcast_policy(policy, n_c)
         k_stream, k_scan = jax.random.split(key)
         if stream is None:
             stream = source.stream(k_stream, cfg)
         keys = jax.random.split(k_scan, cfg.n_steps)
-        state0 = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (n_c,) + x.shape), _init_state(cfg))
+        cs0 = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_c,) + x.shape), core.init())
         block = lambda x: x.reshape((n_outer, k_refresh) + x.shape[1:])
         xs = jax.tree.map(block, (keys, stream))
-        (state, rej_all), (util_trace, fail_trace) = jax.lax.scan(
+        (cs, rej_all), traces = jax.lax.scan(
             functools.partial(outer_block, policy),
-            (state0, jnp.zeros(())), xs
+            (cs0, jnp.zeros(())), xs
         )
-        util_trace = util_trace.reshape(cfg.n_steps, n_c).T      # [C, T]
-        fail_trace = fail_trace.reshape(cfg.n_steps, n_c).T
-        per_cluster = RunMetrics(
-            utilization=state.core_hours / (cfg.horizon_hours * caps),
-            failure_rate=state.fail_requests
-            / jnp.maximum(state.total_requests, 1.0),
-            total_requests=state.total_requests,
-            failed_requests=state.fail_requests,
-            arrivals_accepted=state.arr_accepted,
-            arrivals_rejected=state.arr_rejected,
-            slot_overflow=state.slot_overflow,
-            n_departed=state.n_departed,
-            alive_end=jnp.sum(state.alive.astype(jnp.float32), axis=1),
-            util_trace=util_trace,
-            fail_trace=fail_trace,
-        )
-        tot_req = jnp.sum(state.total_requests)
-        tot_fail = jnp.sum(state.fail_requests)
-        return FleetMetrics(
-            utilization=jnp.sum(state.core_hours)
-            / (cfg.horizon_hours * jnp.sum(caps)),
-            failure_rate=tot_fail / jnp.maximum(tot_req, 1.0),
-            total_requests=tot_req,
-            failed_requests=tot_fail,
-            arrivals_accepted=jnp.sum(state.arr_accepted),
-            arrivals_rejected=jnp.sum(state.arr_rejected) + rej_all,
-            rejected_by_all=rej_all,
-            slot_overflow=jnp.sum(state.slot_overflow),
-            util_trace=jnp.sum(util_trace, axis=0),
-            fail_trace=jnp.sum(fail_trace, axis=0),
-            per_cluster=per_cluster,
-        )
+        util_trace = traces[0].reshape(cfg.n_steps, n_c).T      # [C, T]
+        fail_trace = traces[1].reshape(cfg.n_steps, n_c).T
+        metrics = _fleet_metrics(cfg, caps, cs.slots, util_trace, fail_trace,
+                                 rej_all)
+        if record_decisions:
+            accept = traces[2].reshape(cfg.n_steps, n_c, cfg.max_arrivals)
+            assign = traces[3].reshape(cfg.n_steps, cfg.max_arrivals)
+            return metrics, accept, assign
+        return metrics
 
     def run(key: jax.Array, policy: PolicyParams,
-            stream: Optional[ArrivalStream] = None) -> FleetMetrics:
+            stream: Optional[ArrivalStream] = None):
         _check_fleet_policy_capacity(policy, fcfg)
         return _sim_run(key, policy, stream)
 

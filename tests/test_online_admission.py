@@ -1,0 +1,216 @@
+"""Online/offline equivalence and the micro-batching front-end.
+
+The ``OnlineAdmissionEngine`` is built from the *same*
+``make_admission_core`` functions the offline drivers scan — so feeding it
+the exact event keys and arrival stream a ``make_run`` call draws must
+reproduce the offline decisions and final metrics bit-for-bit. These tests
+assert exactly that (single cluster tier-1; the quick-preset fleet variant
+is slow-marked), plus the submit/flush future contract, the background
+pump, observed-event ingestion, and the tuned-operating-point loader the
+daemon depends on.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (AZURE_PRIORS, SECOND, ZEROTH, fleet_policy,
+                        geometric_grid, make_policy)
+from repro.serve import (Arrival, ExternalEvents, OnlineAdmissionEngine,
+                         default_policy_param, format_operating_derived,
+                         load_operating_point, operating_row_name)
+from repro.sim import (FleetConfig, LeastUtilizedRouter, SimConfig,
+                       draw_arrival_stream, make_fleet_run, make_run)
+
+CFG = SimConfig(capacity=500.0, arrival_rate=0.08, horizon_hours=30 * 24.0,
+                dt=24.0, max_slots=96, max_arrivals=4, d_points=8,
+                priors=AZURE_PRIORS, agg_refresh_steps=3)
+GRID = geometric_grid(24.0, 3 * 30 * 24.0, 12)
+
+SMALL = CFG._replace(horizon_hours=6 * 24.0, max_slots=32,
+                     agg_refresh_steps=1)
+
+
+def _offline_inputs(key, cfg):
+    """Replicate make_run's key discipline: one stream draw, then one event
+    key per step."""
+    k_stream, k_scan = jax.random.split(key)
+    stream = draw_arrival_stream(k_stream, cfg)
+    keys = jax.random.split(k_scan, cfg.n_steps)
+    return stream, keys
+
+
+def _drive(engine, stream, keys):
+    n_arr = np.asarray(stream.n_arrivals)
+    n_lanes = stream.c0.shape[1]
+    accepts = []
+    for t in range(keys.shape[0]):
+        engine.tick(keys[t])
+        slice_t = jax.tree.map(lambda x: x[t], stream)
+        accepts.append(engine.decide_slice(
+            slice_t, np.arange(n_lanes) < n_arr[t]))
+    return np.stack(accepts)
+
+
+def _assert_metrics_equal(off, on):
+    for name, val in off._asdict().items():
+        got = getattr(on, name)
+        if hasattr(val, "_asdict"):
+            _assert_metrics_equal(val, got)
+        else:
+            np.testing.assert_array_equal(np.asarray(val), np.asarray(got),
+                                          err_msg=name)
+
+
+def test_single_cluster_matches_offline_bit_for_bit():
+    pol = make_policy(SECOND, rho=0.05, capacity=CFG.capacity)
+    key = jax.random.PRNGKey(1)
+    m_off, acc_off = make_run(CFG, GRID, SECOND,
+                              record_decisions=True)(key, pol)
+    stream, keys = _offline_inputs(key, CFG)
+    eng = OnlineAdmissionEngine(CFG, GRID, SECOND, pol)
+    acc_on = _drive(eng, stream, keys)
+    np.testing.assert_array_equal(acc_on, np.asarray(acc_off))
+    _assert_metrics_equal(m_off, eng.metrics())
+
+
+@pytest.mark.slow
+def test_fleet_quick_preset_matches_offline_bit_for_bit():
+    # the quick preset's shapes (1536 slots, 32-point grid, K=8) over a
+    # shortened horizon — heavy enough to exercise the vmapped fleet path
+    # at production state size
+    base = SimConfig(capacity=5_000.0, arrival_rate=0.25,
+                     horizon_hours=40 * 12.0, dt=12.0, max_slots=1536,
+                     max_arrivals=5, priors=AZURE_PRIORS,
+                     agg_refresh_steps=8)
+    fleet = FleetConfig(base=base, capacities=(3_000.0, 2_000.0))
+    grid = geometric_grid(12.0, 3 * 40 * 12.0, 32)
+    pol = fleet_policy(SECOND, capacities=fleet.capacities, rho=0.08)
+    key = jax.random.PRNGKey(2)
+    m_off, acc_off, _ = make_fleet_run(
+        fleet, grid, SECOND, router=LeastUtilizedRouter(),
+        record_decisions=True)(key, pol)
+    stream, keys = _offline_inputs(key, base)
+    eng = OnlineAdmissionEngine(fleet, grid, SECOND, pol,
+                                router=LeastUtilizedRouter())
+    acc_on = _drive(eng, stream, keys)
+    np.testing.assert_array_equal(acc_on, np.any(np.asarray(acc_off), axis=1))
+    _assert_metrics_equal(m_off, eng.metrics())
+
+
+def test_submit_flush_matches_decide_slice():
+    """The micro-batching front-end stacks submitted tickets onto exactly
+    the decide_slice path: same arrivals, same decisions."""
+    pol = make_policy(SECOND, rho=0.05, capacity=SMALL.capacity)
+    key = jax.random.PRNGKey(3)
+    stream, keys = _offline_inputs(key, SMALL)
+    n_arr = np.asarray(stream.n_arrivals)
+    n_lanes = stream.c0.shape[1]
+
+    ref = OnlineAdmissionEngine(SMALL, GRID, SECOND, pol)
+    acc_ref = _drive(ref, stream, keys)
+
+    eng = OnlineAdmissionEngine(SMALL, GRID, SECOND, pol)
+    for t in range(SMALL.n_steps):
+        eng.tick(keys[t])
+        futs = [eng.submit(Arrival.from_stream(stream, t, a))
+                for a in range(min(int(n_arr[t]), n_lanes))]
+        assert eng.n_pending == len(futs)
+        eng.flush()
+        got = [f.result() for f in futs]
+        want = list(acc_ref[t][:len(futs)])
+        assert got == [bool(w) for w in want]
+    assert eng.decisions == int(np.minimum(n_arr, n_lanes).sum())
+
+
+def test_background_pump_resolves_futures():
+    pol = make_policy(ZEROTH, threshold=SMALL.capacity,
+                      capacity=SMALL.capacity)
+    eng = OnlineAdmissionEngine(SMALL, GRID, ZEROTH, pol, micro_batch=4)
+    eng.tick(jax.random.PRNGKey(0))
+    eng.start(interval_s=0.001)
+    try:
+        keys = jax.random.split(jax.random.PRNGKey(4), 10)
+        futs = [eng.submit(Arrival.draw(k, SMALL)) for k in keys]
+        results = [f.result(timeout=30) for f in futs]
+    finally:
+        eng.stop()
+    assert all(isinstance(r, bool) for r in results)
+    assert eng.decisions == len(futs)
+
+
+def test_external_event_ingestion():
+    """Production path: observed departures/scale-outs via tick(events=)."""
+    pol = make_policy(ZEROTH, threshold=SMALL.capacity,
+                      capacity=SMALL.capacity)
+    eng = OnlineAdmissionEngine(SMALL, GRID, ZEROTH, pol, micro_batch=4)
+    eng.tick(jax.random.PRNGKey(0))
+    fut = eng.submit(Arrival.draw(jax.random.PRNGKey(5), SMALL))
+    eng.flush()
+    assert fut.result() is True  # empty cluster, threshold = capacity
+
+    s = SMALL.max_slots
+    zeros = np.zeros(s, np.float32)
+    no_deaths = np.zeros(s, bool)
+    scaleout = zeros.copy()
+    scaleout[0] = 5.0          # sequential placement: first slot
+    n_req = zeros.copy()
+    n_req[0] = 1.0
+    eng.tick(events=ExternalEvents(core_deaths=zeros, spont_death=no_deaths,
+                                   scaleout_cores=scaleout,
+                                   n_scaleouts=n_req))
+    m = eng.metrics()
+    assert int(m.total_requests) == 1
+    assert int(m.failed_requests) == 0
+    assert int(m.alive_end) == 1
+
+    kill = no_deaths.copy()
+    kill[0] = True
+    eng.tick(events=ExternalEvents(core_deaths=zeros, spont_death=kill,
+                                   scaleout_cores=zeros, n_scaleouts=zeros))
+    m = eng.metrics()
+    assert int(m.alive_end) == 0
+    assert int(m.n_departed) == 1
+
+
+def test_tick_and_flush_protocol_errors():
+    pol = make_policy(SECOND, rho=0.05, capacity=SMALL.capacity)
+    eng = OnlineAdmissionEngine(SMALL, GRID, SECOND, pol)
+    with pytest.raises(RuntimeError):
+        eng.flush()
+    with pytest.raises(ValueError):
+        eng.tick()
+    with pytest.raises(ValueError):
+        eng.tick(jax.random.PRNGKey(0),
+                 events=ExternalEvents(*[np.zeros(SMALL.max_slots)] * 4))
+
+
+def test_operating_point_roundtrip(tmp_path):
+    rows = [
+        {"name": operating_row_name("quick", "second"), "us_per_call": 0.0,
+         "derived": format_operating_derived(0.08, 5_000.0, 5e-4)},
+        {"name": operating_row_name("quick", "first"), "us_per_call": 0.0,
+         "derived": format_operating_derived(1_850.0, 5_000.0, 5e-4)},
+    ]
+    path = tmp_path / "BENCH_quick.json"
+    path.write_text(json.dumps({"scale": "quick", "rows": rows}))
+
+    op = load_operating_point("second", "quick", bench_path=str(path))
+    assert op.theta == 0.08 and op.capacity == 5_000.0 and op.tau == 5e-4
+    # rho is scale-free; thresholds rescale linearly with capacity
+    assert op.theta_for(1_000.0) == 0.08
+    first = load_operating_point("first", "quick", bench_path=str(path))
+    assert first.theta_for(1_000.0) == pytest.approx(370.0)
+
+    assert default_policy_param("second", 1_000.0,
+                                bench_path=str(path)) == 0.08
+    missing = tmp_path / "nope.json"
+    with pytest.warns(UserWarning, match="falling back"):
+        param = default_policy_param("second", 1_000.0,
+                                     bench_path=str(missing))
+    assert param == 0.15
+    with pytest.warns(UserWarning):
+        param = default_policy_param("zeroth", 1_000.0,
+                                     bench_path=str(missing))
+    assert param == 700.0

@@ -51,6 +51,42 @@ def test_continuous_batching_overlaps_requests(engine_setup):
     assert peak_active <= 2  # never exceeds slot budget
 
 
+def test_fused_prefill_matches_token_by_token(engine_setup):
+    """The fused lax.scan prefill must reproduce the token-by-token loop
+    exactly — same outputs for every request, including requests prefilled
+    while other slots are mid-decode (the loop advances their cache too)."""
+    cfg, model, params = engine_setup
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(2, cfg.vocab, n).astype(np.int32)
+               for n in (5, 1, 7, 3, 6)]
+    outs = {}
+    for mode in ("loop", "fused"):
+        engine = ServeEngine(model, params, max_batch=2, max_seq=48,
+                             prefill_mode=mode)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=6)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            engine.submit(r)
+        done = engine.run_until_drained()
+        assert sorted(r.rid for r in done) == list(range(len(reqs)))
+        outs[mode] = [tuple(r.out_tokens) for r in reqs]
+    assert outs["fused"] == outs["loop"]
+
+
+def test_run_until_drained_returns_completed(engine_setup):
+    cfg, model, params = engine_setup
+    engine = ServeEngine(model, params, max_batch=2, max_seq=32)
+    reqs = [Request(rid=i, prompt=np.asarray([4 + i, 11], np.int32),
+                    max_new_tokens=3) for i in range(3)]
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run_until_drained()
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert all(r.done for r in done)
+    # a second drain has nothing new to report
+    assert engine.run_until_drained() == []
+
+
 def test_greedy_decode_is_deterministic(engine_setup):
     cfg, model, params = engine_setup
     outs = []
