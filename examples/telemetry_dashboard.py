@@ -1,0 +1,118 @@
+"""Telemetry dashboard: what the admission controller sees about itself.
+
+Drives the online ``OnlineAdmissionEngine`` with the device telemetry rider
+enabled (``SimConfig(telemetry=True)``) and a ``DecisionTracer`` attached,
+serves its live ``/metrics`` endpoint, scrapes it mid-run like Prometheus
+would, and finally renders the device-side counters — admissions by reason,
+the occupancy histogram, aggregate staleness at decision time — as an ASCII
+dashboard next to the host-side latency percentiles and a few structured
+decision-trace records.
+
+  PYTHONPATH=src python examples/telemetry_dashboard.py
+  REPRO_SMOKE=1 PYTHONPATH=src python examples/telemetry_dashboard.py  # CI
+"""
+import json
+import os
+import tempfile
+import urllib.request
+
+import jax
+import numpy as np
+
+from repro.core import AZURE_PRIORS, SECOND, geometric_grid, make_policy
+from repro.obs import DecisionTracer, MetricsServer, snapshot_to_prometheus
+from repro.serve import Arrival, OnlineAdmissionEngine
+from repro.sim import SimConfig, draw_arrival_stream
+
+SMOKE = os.environ.get("REPRO_SMOKE") == "1"
+
+
+def bar(count, total, width=32):
+    n = int(round(width * count / total)) if total else 0
+    return "#" * n + "." * (width - n)
+
+
+def main():
+    days = 10 if SMOKE else 90
+    cfg = SimConfig(capacity=500.0, arrival_rate=0.1,
+                    horizon_hours=days * 24.0, dt=24.0, max_slots=96,
+                    max_arrivals=4, priors=AZURE_PRIORS,
+                    agg_refresh_steps=2, telemetry=True)
+    grid = geometric_grid(cfg.dt, cfg.horizon_hours * 3, 16)
+    pol = make_policy(SECOND, rho=0.1, capacity=cfg.capacity)
+
+    trace_path = os.path.join(tempfile.mkdtemp(prefix="repro_obs_"),
+                              "decisions.jsonl")
+    tracer = DecisionTracer(trace_path)
+    engine = OnlineAdmissionEngine(cfg, grid, SECOND, pol, tracer=tracer)
+    server = MetricsServer(
+        lambda: snapshot_to_prometheus(engine.metrics_snapshot()), port=0)
+    url = f"http://127.0.0.1:{server.port}/metrics"
+    print(f"live metrics at {url}")
+
+    key = jax.random.PRNGKey(0)
+    k_stream, k_scan = jax.random.split(key)
+    stream = draw_arrival_stream(k_stream, cfg)
+    keys = jax.random.split(k_scan, cfg.n_steps)
+    n_arr = np.asarray(stream.n_arrivals)
+    n_lanes = stream.c0.shape[1]
+    for t in range(cfg.n_steps):
+        engine.tick(keys[t])
+        futs = [engine.submit(Arrival.from_stream(stream, t, a))
+                for a in range(min(int(n_arr[t]), n_lanes))]
+        engine.flush()
+        for f in futs:
+            f.result()
+        if t == cfg.n_steps // 2:  # a mid-run Prometheus scrape, live
+            body = urllib.request.urlopen(url, timeout=10).read().decode()
+            wanted = ("repro_admission_requests_total",
+                      "repro_admission_admitted_total",
+                      "repro_admission_ticks_total")
+            print(f"\n-- mid-run scrape (t={t}) " + "-" * 28)
+            for line in body.splitlines():
+                if line.split("{")[0].split(" ")[0] in wanted:
+                    print("  " + line)
+
+    snap = engine.metrics_snapshot()
+    tracer.close()
+    server.close()
+
+    eng, tel = snap["engine"], snap["telemetry"]
+    print("\n== decisions " + "=" * 35)
+    for label, n in (("admitted", tel["n_admit"]),
+                     ("rejected (capacity)", tel["n_reject_capacity"]),
+                     ("rejected (policy)", tel["n_reject_policy"])):
+        print(f"  {label:<22} {int(n):>5}  {bar(n, tel['n_routed'])}")
+
+    print("\n== occupancy (fraction of capacity, per window) ==")
+    occ = tel["occupancy_hist"]
+    for i, n in enumerate(occ):
+        if n:
+            lo, hi = i / len(occ), (i + 1) / len(occ)
+            print(f"  [{lo:4.2f},{hi:4.2f}) {int(n):>4}  {bar(n, sum(occ))}")
+
+    print("\n== aggregate staleness at decision time (windows) ==")
+    for i, n in enumerate(tel["staleness_hist"]):
+        if n:
+            print(f"  {i:>2} stale {int(n):>5}  "
+                  f"{bar(n, sum(tel['staleness_hist']))}")
+
+    lat = eng["decision_latency_seconds"]
+    print("\n== engine ==")
+    print(f"  requests={eng['n_requests']} flushes={eng['n_flushes']} "
+          f"refreshes={eng['n_refreshes']} ticks={eng['n_ticks']}")
+    print(f"  decision latency p50={lat.percentile(0.5) * 1e3:.2f}ms "
+          f"p99={lat.percentile(0.99) * 1e3:.2f}ms")
+    print(f"  observed departures={tel['obs']['departed']:.0f} "
+          f"scale-outs={tel['obs']['n_scaleouts']:.0f}")
+
+    with open(trace_path, encoding="utf-8") as f:
+        records = [json.loads(line) for line in f]
+    print(f"\n== decision trace ({len(records)} records at {trace_path}) ==")
+    for rec in records[:3]:
+        print("  " + json.dumps(rec))
+    assert len(records) == eng["n_requests"]
+
+
+if __name__ == "__main__":
+    main()

@@ -16,9 +16,11 @@ from .belief import (GammaBelief, belief_from_prior, update_on_events,
                      pseudo_counts_from_observables)
 from .moments import (MomentCurves, aggregate_moment_curves, moment_curves,
                       moment_curves_discrete, moment_curves_fused)
-from .policies import (ZEROTH, FIRST, SECOND, PolicyParams, fleet_policy,
-                       make_policy, geometric_grid, paper_cascade, decide,
-                       admit_sequential, is_safe, tune_threshold)
+from .policies import (ZEROTH, FIRST, SECOND, DecisionDiag, PolicyParams,
+                       fleet_policy, make_policy, geometric_grid,
+                       paper_cascade, decide, decide_scored,
+                       admit_sequential, admit_sequential_verbose, is_safe,
+                       tune_threshold)
 from . import pomdp, pricing
 
 __all__ = [
@@ -31,6 +33,7 @@ __all__ = [
     "moment_curves_discrete", "moment_curves_fused", "ZEROTH",
     "FIRST", "SECOND", "PolicyParams", "fleet_policy", "make_policy",
     "geometric_grid",
-    "paper_cascade", "decide", "admit_sequential", "is_safe",
+    "paper_cascade", "decide", "decide_scored", "DecisionDiag",
+    "admit_sequential", "admit_sequential_verbose", "is_safe",
     "tune_threshold", "pomdp", "pricing",
 ]

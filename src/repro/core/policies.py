@@ -96,9 +96,27 @@ def paper_cascade(n_per: int = 600) -> jax.Array:
 # deployments; cand: the candidate's curves [N]; util: current active cores.
 # ---------------------------------------------------------------------------
 
-def decide(params: PolicyParams, agg_el: jax.Array, agg_vl: jax.Array,
-           util: jax.Array, cand: MomentCurves, cand_c0: jax.Array) -> jax.Array:
-    """Boolean admission decision for a single candidate."""
+class DecisionDiag(NamedTuple):
+    """Per-candidate decision diagnostics from ``decide_scored`` (telemetry
+    and tracing inputs; dead-code-eliminated by XLA when unused)."""
+
+    fits: jax.Array       # physical capacity fit at the decision point
+    score: jax.Array      # the policy's scalar score (kind-dependent)
+    threshold: jax.Array  # the bound the score was compared against
+
+
+def decide_scored(params: PolicyParams, agg_el: jax.Array, agg_vl: jax.Array,
+                  util: jax.Array, cand: MomentCurves, cand_c0: jax.Array
+                  ) -> tuple[jax.Array, DecisionDiag]:
+    """Boolean admission decision plus its diagnostics for one candidate.
+
+    The boolean is exactly ``decide``'s; ``DecisionDiag`` additionally
+    reports the physical-fit flag and the kind's scalar score — worst-case
+    ``util + c0`` (zeroth), max aggregate ``E[L_n]`` after admission
+    (first), or max Cantelli mass (second) — against its bound. Telemetry
+    counters and decision tracing consume the diagnostics; callers that
+    ignore them compile to the same program as ``decide``.
+    """
     el_after = agg_el + cand.EL
     vl_after = agg_vl + cand.VL
     fits = util + cand_c0 <= params.capacity  # physical: the request must fit
@@ -118,7 +136,19 @@ def decide(params: PolicyParams, agg_el: jax.Array, agg_vl: jax.Array,
         params.kind == ZEROTH, zeroth_ok,
         jnp.where(params.kind == FIRST, first_ok, second_ok),
     )
-    return ok & fits
+    score = jnp.where(
+        params.kind == ZEROTH, util + cand_c0,
+        jnp.where(params.kind == FIRST, jnp.max(el_after),
+                  jnp.max(cantelli)),
+    )
+    bound = jnp.where(params.kind == SECOND, params.rho, params.threshold)
+    return ok & fits, DecisionDiag(fits=fits, score=score, threshold=bound)
+
+
+def decide(params: PolicyParams, agg_el: jax.Array, agg_vl: jax.Array,
+           util: jax.Array, cand: MomentCurves, cand_c0: jax.Array) -> jax.Array:
+    """Boolean admission decision for a single candidate."""
+    return decide_scored(params, agg_el, agg_vl, util, cand, cand_c0)[0]
 
 
 def is_safe(params: PolicyParams, agg_el: jax.Array, agg_vl: jax.Array) -> jax.Array:
@@ -140,6 +170,34 @@ class AdmitResult(NamedTuple):
     util: jax.Array     # scalar
 
 
+def admit_sequential_verbose(
+        params: PolicyParams, agg_el: jax.Array, agg_vl: jax.Array,
+        util: jax.Array, cands: MomentCurves, cand_c0: jax.Array,
+        valid: jax.Array) -> tuple[AdmitResult, DecisionDiag]:
+    """``admit_sequential`` plus the per-candidate ``DecisionDiag`` (leading
+    ``[A]`` axis) captured *at each candidate's decision point* — the fit
+    flag and score reflect the running aggregate after the candidates
+    admitted before it, which is what telemetry reason counters and decision
+    traces need. Decisions are identical to ``admit_sequential`` (same scan,
+    same arithmetic); ignoring the diagnostics compiles them away."""
+
+    def step(carry, x):
+        el, vl, u = carry
+        c_el, c_vl, c0, ok_slot = x
+        acc, diag = decide_scored(params, el, vl, u,
+                                  MomentCurves(c_el, c_vl), c0)
+        acc = acc & ok_slot
+        el = jnp.where(acc, el + c_el, el)
+        vl = jnp.where(acc, vl + c_vl, vl)
+        u = jnp.where(acc, u + c0, u)
+        return (el, vl, u), (acc, diag)
+
+    (agg_el, agg_vl, util), (accept, diag) = jax.lax.scan(
+        step, (agg_el, agg_vl, util), (cands.EL, cands.VL, cand_c0, valid)
+    )
+    return AdmitResult(accept, agg_el, agg_vl, util), diag
+
+
 def admit_sequential(params: PolicyParams, agg_el: jax.Array, agg_vl: jax.Array,
                      util: jax.Array, cands: MomentCurves, cand_c0: jax.Array,
                      valid: jax.Array) -> AdmitResult:
@@ -147,20 +205,9 @@ def admit_sequential(params: PolicyParams, agg_el: jax.Array, agg_vl: jax.Array,
 
     cands.EL/VL: [A, N]; cand_c0, valid: [A]. Invalid slots are skipped.
     """
-
-    def step(carry, x):
-        el, vl, u = carry
-        c_el, c_vl, c0, ok_slot = x
-        acc = decide(params, el, vl, u, MomentCurves(c_el, c_vl), c0) & ok_slot
-        el = jnp.where(acc, el + c_el, el)
-        vl = jnp.where(acc, vl + c_vl, vl)
-        u = jnp.where(acc, u + c0, u)
-        return (el, vl, u), acc
-
-    (agg_el, agg_vl, util), accept = jax.lax.scan(
-        step, (agg_el, agg_vl, util), (cands.EL, cands.VL, cand_c0, valid)
-    )
-    return AdmitResult(accept, agg_el, agg_vl, util)
+    res, _ = admit_sequential_verbose(params, agg_el, agg_vl, util, cands,
+                                      cand_c0, valid)
+    return res
 
 
 # ---------------------------------------------------------------------------

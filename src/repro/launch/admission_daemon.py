@@ -15,14 +15,25 @@ committed ``BENCH_quick.json`` calibration rows (rescaled to the daemon's
 capacity); the legacy hand-picked constants remain only as a warned
 fallback when no row exists.
 
+Observability: ``--metrics-port`` serves the engine's non-blocking
+``metrics_snapshot()`` as Prometheus text on ``GET /metrics`` (device
+telemetry counters + decision-latency/batch-size histograms; port 0 binds an
+ephemeral port and logs it). SIGTERM/SIGINT shut down gracefully: the serve
+loop stops at the next tick boundary, pending futures are flushed, and the
+final metrics snapshot is logged before exit 0.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.admission_daemon --hours 2000 \
       --capacity 4096 [--policy second|first|zeroth] [--fleet 2048,2048] \
-      [--param RHO_OR_THRESHOLD] [--micro-batch 8]
+      [--param RHO_OR_THRESHOLD] [--micro-batch 8] [--metrics-port 9109] \
+      [--throttle 0.05]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import signal
+import threading
 import time
 
 import jax
@@ -32,6 +43,9 @@ from ..core import AZURE_PRIORS, FIRST, SECOND, ZEROTH, geometric_grid, \
     make_policy
 from ..core.policies import fleet_policy
 from ..models.registry import ARCH_NAMES
+from ..obs import get_logger, set_level
+
+log = get_logger("launch.admission_daemon")  # stable name under python -m
 
 #: chips per replica of each servable arch (model-parallel footprint at bf16)
 CHIPS_PER_REPLICA = {
@@ -47,15 +61,17 @@ def build_engine(args):
     """CLI args -> (engine, stream, keys): the configured online engine plus
     the synthetic arrival stream and per-tick event keys driving it."""
     from ..sim import (FleetConfig, SimConfig, draw_arrival_stream,
-                       stream_config)
+                      stream_config)
     from ..serve import OnlineAdmissionEngine, default_policy_param
 
     kind_name = args.policy
     kind = POLICY_KINDS[kind_name]
+    telemetry = bool(getattr(args, "telemetry", False)
+                     or getattr(args, "metrics_port", None) is not None)
     base = SimConfig(capacity=args.capacity, arrival_rate=args.arrival_rate,
                      horizon_hours=args.hours, dt=args.dt,
                      max_slots=args.max_slots, max_arrivals=args.micro_batch,
-                     priors=AZURE_PRIORS)
+                     priors=AZURE_PRIORS, telemetry=telemetry)
     grid = geometric_grid(args.dt, args.hours * 3, 32)
 
     param = args.param
@@ -83,10 +99,17 @@ def build_engine(args):
     return engine, stream, keys, param
 
 
-def serve_loop(engine, stream, keys, *, log_every: int = 0) -> dict:
+def serve_loop(engine, stream, keys, *, log_every: int = 0,
+               stop: threading.Event | None = None,
+               throttle_s: float = 0.0) -> dict:
     """Drive the engine tick-by-tick: dynamics, then this window's arrivals
     through the micro-batching submit/flush front-end. Returns summary
-    counters (the engine itself holds the metrics)."""
+    counters (the engine itself holds the metrics).
+
+    ``stop`` (checked at each tick boundary) ends the loop early — the
+    graceful-shutdown path; pending futures are still flushed and resolved.
+    ``throttle_s`` sleeps between ticks so a scraper can watch ``/metrics``
+    evolve (CI uses this to curl a live daemon)."""
     from ..serve import Arrival
 
     n_steps = keys.shape[0]
@@ -94,18 +117,46 @@ def serve_loop(engine, stream, keys, *, log_every: int = 0) -> dict:
     n_arr = np.asarray(stream.n_arrivals)
     admitted = 0
     t0 = time.time()
+    ticks = 0
     for t in range(n_steps):
+        if stop is not None and stop.is_set():
+            log.info("stop requested at tick %d/%d", t, n_steps)
+            break
         engine.tick(keys[t])
+        ticks += 1
         futs = [engine.submit(Arrival.from_stream(stream, t, a))
                 for a in range(min(int(n_arr[t]), max_a))]
         engine.flush()
         admitted += sum(f.result() for f in futs)
         if log_every and (t + 1) % log_every == 0:
             m = engine.metrics()
-            print(f"  t={t + 1}/{n_steps} util={float(m.utilization):.3f} "
-                  f"admitted={admitted}/{engine.decisions}")
+            log.info("t=%d/%d util=%.3f admitted=%d/%d", t + 1, n_steps,
+                     float(m.utilization), admitted, engine.decisions)
+        if throttle_s > 0.0:
+            time.sleep(throttle_s)
+    engine.flush()  # resolve anything a racing submitter queued
     return {"admitted": admitted, "decisions": engine.decisions,
-            "seconds": time.time() - t0}
+            "ticks": ticks, "seconds": time.time() - t0}
+
+
+def snapshot_log_line(snap: dict) -> str:
+    """One JSON line of the scalar snapshot fields (histograms reduced to
+    p50/p99 and counts) — what the daemon logs at shutdown."""
+    eng = dict(snap.get("engine", {}))
+    lat = eng.pop("decision_latency_seconds", None)
+    batch = eng.pop("flush_batch_size", None)
+    if lat is not None:
+        eng["latency_p50_s"] = round(lat.percentile(0.5), 6)
+        eng["latency_p99_s"] = round(lat.percentile(0.99), 6)
+    if batch is not None:
+        eng["mean_batch"] = round(batch.sum / max(batch.total, 1), 3)
+    out = {"engine": eng}
+    tel = snap.get("telemetry")
+    if tel:
+        out["telemetry"] = {k: v for k, v in tel.items()
+                            if isinstance(v, (int, float))}
+        out["telemetry"]["obs_departed"] = tel["obs"]["departed"]
+    return json.dumps(out, sort_keys=True)
 
 
 def main():
@@ -128,29 +179,62 @@ def main():
                          "points and the measured agg-refresh K-curve")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=0)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text on GET /metrics at this "
+                         "port (0 = ephemeral; enables device telemetry)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="carry the device telemetry rider even without a "
+                         "metrics port")
+    ap.add_argument("--throttle", type=float, default=0.0, metavar="SECONDS",
+                    help="sleep between ticks so /metrics can be watched "
+                         "while the daemon runs")
     args = ap.parse_args()
+    set_level("INFO")  # the daemon is a CLI: its operational log is output
 
     engine, stream, keys, param = build_engine(args)
     mode = f"fleet[{args.fleet}]" if args.fleet else "single"
-    print(f"[admission-daemon] policy={args.policy} param={param:g} "
-          f"capacity={args.capacity:.0f} chips {mode} "
-          f"micro_batch={engine.width} agg_refresh_K={engine.k_refresh}")
+    log.info("policy=%s param=%g capacity=%.0f chips %s micro_batch=%d "
+             "agg_refresh_K=%d telemetry=%s", args.policy, param,
+             args.capacity, mode, engine.width, engine.k_refresh,
+             engine.base.telemetry)
     rng = np.random.default_rng(args.seed)
     arch_mix = rng.choice(len(ARCH_NAMES), size=8)
-    print(f"  sample of admitted job types: "
-          f"{[ARCH_NAMES[i] for i in arch_mix]}")
-    print(f"  chips/replica table: {CHIPS_PER_REPLICA}")
+    log.info("sample of admitted job types: %s",
+             [ARCH_NAMES[i] for i in arch_mix])
+    log.info("chips/replica table: %s", CHIPS_PER_REPLICA)
 
-    summary = serve_loop(engine, stream, keys, log_every=args.log_every)
+    server = None
+    if args.metrics_port is not None:
+        from ..obs import MetricsServer, snapshot_to_prometheus
+        server = MetricsServer(
+            lambda: snapshot_to_prometheus(engine.metrics_snapshot()),
+            port=args.metrics_port)
+        log.info("metrics: http://127.0.0.1:%d/metrics", server.port)
+
+    stop = threading.Event()
+
+    def _on_signal(signum, frame):
+        log.info("received %s; shutting down gracefully",
+                 signal.Signals(signum).name)
+        stop.set()
+
+    signal.signal(signal.SIGTERM, _on_signal)
+    signal.signal(signal.SIGINT, _on_signal)
+
+    summary = serve_loop(engine, stream, keys, log_every=args.log_every,
+                         stop=stop, throttle_s=args.throttle)
     m = engine.metrics()
     rate = summary["decisions"] / max(summary["seconds"], 1e-9)
-    print(f"  utilization={float(m.utilization):.3f} "
-          f"scaleout_failures={int(m.failed_requests)}/"
-          f"{int(m.total_requests)} "
-          f"admitted={int(m.arrivals_accepted)} "
-          f"rejected={int(m.arrivals_rejected)}")
-    print(f"  served {summary['decisions']} admission decisions in "
-          f"{summary['seconds']:.1f}s ({rate:.1f} decisions/s)")
+    log.info("utilization=%.3f scaleout_failures=%d/%d admitted=%d "
+             "rejected=%d", float(m.utilization), int(m.failed_requests),
+             int(m.total_requests), int(m.arrivals_accepted),
+             int(m.arrivals_rejected))
+    log.info("served %d admission decisions over %d ticks in %.1fs "
+             "(%.1f decisions/s)", summary["decisions"], summary["ticks"],
+             summary["seconds"], rate)
+    log.info("final snapshot %s", snapshot_log_line(engine.metrics_snapshot()))
+    if server is not None:
+        server.close()
 
 
 if __name__ == "__main__":

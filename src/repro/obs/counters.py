@@ -1,0 +1,230 @@
+"""Device-side telemetry counters: the ``TelemetryState`` pytree rider.
+
+The paper's setting is *partial observability* — the provider decides from
+the observed usage stream — yet the simulators and the online engine used to
+discard almost everything they observe between end-of-run metrics. This
+module is the retained stream: a small pytree of counters, histograms, and
+streaming sufficient statistics that rides inside ``CoreState`` through the
+``AdmissionCore`` step functions, the ``make_run``/``make_fleet_run`` scans,
+and the online engine's donated jitted steps.
+
+The rider is **statically disabled by default**: with
+``SimConfig(telemetry=False)`` the ``CoreState.tel`` field is ``None`` (an
+empty pytree node), every fold below is skipped at trace time, and the
+compiled programs are the exact pre-telemetry graphs — equivalence against
+the committed goldens is asserted in ``tests/test_telemetry.py``. Enabled,
+every fold is a handful of scalar adds and one-hot histogram scatters per
+step, so decisions and metrics stay bit-identical and the measured
+per-decision overhead stays within the ≤3% budget recorded by
+``benchmarks/serve_bench.py``.
+
+Layout: all scalar counters are **packed into one ``[N_SCALARS]`` vector**
+(plus the three histogram vectors) rather than one pytree leaf per counter.
+The online engine donates the whole ``CoreState`` through individually
+jitted per-request steps, and per-call dispatch cost scales with the leaf
+count — twenty donated scalar buffers per decision measurably blew the
+overhead budget; four leaves are free. The ``I_*`` index constants name the
+slots, and property accessors keep host-side reads readable.
+
+Contents (fleet runs vmap the whole rider over the cluster axis, so every
+field below is *per cluster* there — ``n_routed`` across clusters is the
+routing count vector):
+
+  * decision counters by reason — ``n_admit`` / ``n_reject_capacity`` (the
+    request physically did not fit at decision time) / ``n_reject_policy``
+    (it fit but the moment condition said no);
+  * ``occupancy_hist`` / ``headroom_hist`` — per-window utilization and
+    headroom fractions over ``N_OCC_BINS`` equal bins of [0, 1];
+  * ``staleness_hist`` — decisions bucketed by how many ``apply_events``
+    windows the maintained aggregate was stale at decision time (the
+    ``agg_refresh_steps`` blocking made observable);
+  * streaming sufficient statistics of the observables (``obs_*`` sums —
+    the conjugate-update inputs, i.e. the future drift-detector stream) and
+    of admitted arrivals (``arr_*`` — placed count, first/second moments of
+    the initial request size).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: occupancy/headroom histogram bins over the [0, 1] fraction range
+N_OCC_BINS = 16
+#: staleness histogram bins (windows since the last aggregate refresh;
+#: larger values clip into the last bin)
+N_STALENESS_BINS = 16
+
+# scalar slots of TelemetryState.scalars; the decision block (I_N_ADMIT..
+# I_N_ROUTED), the observables block (I_OBS_..I_OBS_DEPARTED), and the
+# arrival block (I_ARR_..) are each contiguous so folds update them with one
+# static-slice add
+(I_N_ADMIT, I_N_REJECT_CAPACITY, I_N_REJECT_POLICY, I_N_ROUTED,
+ I_N_REFRESHES, I_STEPS_SINCE_REFRESH, I_N_WINDOWS,
+ I_OBS_CORE_DEATHS, I_OBS_EXPOSURE_CORE_HOURS, I_OBS_N_SCALEOUTS,
+ I_OBS_SCALEOUT_CORES, I_OBS_ALIVE_HOURS, I_OBS_SPONT_DEATHS,
+ I_OBS_DEPARTED, I_ARR_PLACED, I_ARR_C0_SUM, I_ARR_C0_SUMSQ) = range(17)
+N_SCALARS = 17
+
+
+class WindowStats(NamedTuple):
+    """One ``dt``-window's observable sufficient statistics for a cluster —
+    the scalar sums of everything ``core.belief.update_on_events`` consumes
+    (plus departures), produced by ``_step_dynamics``/ingestion only when
+    telemetry is enabled."""
+
+    core_deaths: jax.Array         # total cores lost to deaths
+    exposure_core_hours: jax.Array  # total core-hour exposure
+    n_scaleouts: jax.Array         # total scale-out requests
+    scaleout_cores: jax.Array      # total cores requested by scale-outs
+    alive_hours: jax.Array         # total deployment-hours alive
+    spont_deaths: jax.Array        # spontaneous whole-deployment shutdowns
+    departed: jax.Array            # deployments that left (any cause)
+
+
+class TelemetryState(NamedTuple):
+    """Device-resident telemetry accumulators (float32; one cluster, or a
+    leading ``[C]`` axis under the fleet vmap)."""
+
+    scalars: jax.Array             # [N_SCALARS], slots named by I_*
+    staleness_hist: jax.Array      # [N_STALENESS_BINS] decisions by staleness
+    occupancy_hist: jax.Array      # [N_OCC_BINS] windows by util/capacity
+    headroom_hist: jax.Array       # [N_OCC_BINS] windows by 1 - util/capacity
+
+    # -- named host-side views over the packed vector -------------------
+    @property
+    def n_admit(self) -> jax.Array:
+        return self.scalars[..., I_N_ADMIT]
+
+    @property
+    def n_routed(self) -> jax.Array:
+        return self.scalars[..., I_N_ROUTED]
+
+    @property
+    def n_refreshes(self) -> jax.Array:
+        return self.scalars[..., I_N_REFRESHES]
+
+    @property
+    def n_windows(self) -> jax.Array:
+        return self.scalars[..., I_N_WINDOWS]
+
+    @property
+    def steps_since_refresh(self) -> jax.Array:
+        return self.scalars[..., I_STEPS_SINCE_REFRESH]
+
+
+def init_telemetry() -> TelemetryState:
+    """A fresh all-zero rider (every leaf a distinct array — the online
+    engine donates the whole ``CoreState``, and aliased leaves would be
+    donated twice)."""
+    return TelemetryState(
+        scalars=jnp.zeros((N_SCALARS,)),
+        staleness_hist=jnp.zeros((N_STALENESS_BINS,)),
+        occupancy_hist=jnp.zeros((N_OCC_BINS,)),
+        headroom_hist=jnp.zeros((N_OCC_BINS,)),
+    )
+
+
+def _hist_bin(frac: jax.Array, n_bins: int) -> jax.Array:
+    """Bin index of a [0, 1] fraction (out-of-range clips to the edges)."""
+    return jnp.clip(jnp.floor(frac * n_bins).astype(jnp.int32), 0, n_bins - 1)
+
+
+def mark_refresh(tel: TelemetryState) -> TelemetryState:
+    """Record a full aggregate recompute: staleness returns to zero."""
+    s = tel.scalars.at[I_N_REFRESHES].add(1.0)
+    s = s.at[I_STEPS_SINCE_REFRESH].set(0.0)
+    return tel._replace(scalars=s)
+
+
+def fold_window(tel: TelemetryState, util: jax.Array, capacity,
+                stats: Optional[WindowStats]) -> TelemetryState:
+    """Fold one ``apply_events`` window: occupancy/headroom histograms, the
+    staleness clock, and the window's observable sufficient statistics."""
+    frac = util / capacity
+    occ = tel.occupancy_hist.at[_hist_bin(frac, N_OCC_BINS)].add(1.0)
+    head = tel.headroom_hist.at[_hist_bin(1.0 - frac, N_OCC_BINS)].add(1.0)
+    s = tel.scalars.at[I_N_WINDOWS].add(1.0)
+    s = s.at[I_STEPS_SINCE_REFRESH].add(1.0)
+    if stats is not None:
+        s = s.at[I_OBS_CORE_DEATHS:I_OBS_DEPARTED + 1].add(jnp.stack([
+            stats.core_deaths, stats.exposure_core_hours, stats.n_scaleouts,
+            stats.scaleout_cores, stats.alive_hours, stats.spont_deaths,
+            stats.departed]))
+    return tel._replace(scalars=s, occupancy_hist=occ, headroom_hist=head)
+
+
+def fold_decisions(tel: TelemetryState, accept: jax.Array, valid: jax.Array,
+                   fits: jax.Array, placed: jax.Array,
+                   c0: jax.Array) -> TelemetryState:
+    """Fold one decision batch: reason counters, the staleness histogram,
+    and the admitted-arrival stream moments.
+
+    ``accept``/``valid``/``fits``/``placed`` are ``[A]`` masks (``fits`` is
+    the physical-fit flag *at each candidate's decision point* from
+    ``admit_sequential_verbose``); ``accept`` already implies ``valid``. A
+    candidate failing both the capacity fit and the moment condition counts
+    as ``n_reject_capacity`` — the physical constraint dominates.
+    """
+    rej = valid & ~accept
+    n_valid = jnp.sum(valid.astype(jnp.float32))
+    placed_f = placed.astype(jnp.float32)
+    stale_bin = jnp.clip(tel.scalars[I_STEPS_SINCE_REFRESH] - 1.0, 0.0,
+                         float(N_STALENESS_BINS - 1)).astype(jnp.int32)
+    s = tel.scalars.at[I_N_ADMIT:I_N_ROUTED + 1].add(jnp.stack([
+        jnp.sum(accept.astype(jnp.float32)),
+        jnp.sum((rej & ~fits).astype(jnp.float32)),
+        jnp.sum((rej & fits).astype(jnp.float32)),
+        n_valid]))
+    s = s.at[I_ARR_PLACED:I_ARR_C0_SUMSQ + 1].add(jnp.stack([
+        jnp.sum(placed_f), jnp.sum(placed_f * c0),
+        jnp.sum(placed_f * c0 * c0)]))
+    return tel._replace(
+        scalars=s,
+        staleness_hist=tel.staleness_hist.at[stale_bin].add(n_valid))
+
+
+def telemetry_summary(tel: TelemetryState) -> dict:
+    """Host-side summary dict of a (possibly ``[C]``-leading) rider: scalar
+    counters as floats, histograms as lists, plus derived means. Fleet
+    riders are reduced over the leading cluster axis with the per-cluster
+    vectors kept under ``per_cluster``."""
+    host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tel)
+    fleet = host.scalars.ndim == 2
+    agg = jax.tree.map(lambda x: x.sum(axis=0), host) if fleet else host
+    s = agg.scalars
+    placed = float(s[I_ARR_PLACED])
+    mean_c0 = float(s[I_ARR_C0_SUM]) / placed if placed else 0.0
+    var_c0 = (float(s[I_ARR_C0_SUMSQ]) / placed - mean_c0 ** 2) if placed \
+        else 0.0
+    out = {
+        "n_admit": float(s[I_N_ADMIT]),
+        "n_reject_capacity": float(s[I_N_REJECT_CAPACITY]),
+        "n_reject_policy": float(s[I_N_REJECT_POLICY]),
+        "n_routed": float(s[I_N_ROUTED]),
+        "n_refreshes": float(s[I_N_REFRESHES]),
+        "n_windows": float(s[I_N_WINDOWS]),
+        "staleness_hist": agg.staleness_hist.tolist(),
+        "occupancy_hist": agg.occupancy_hist.tolist(),
+        "headroom_hist": agg.headroom_hist.tolist(),
+        "obs": {
+            "core_deaths": float(s[I_OBS_CORE_DEATHS]),
+            "exposure_core_hours": float(s[I_OBS_EXPOSURE_CORE_HOURS]),
+            "n_scaleouts": float(s[I_OBS_N_SCALEOUTS]),
+            "scaleout_cores": float(s[I_OBS_SCALEOUT_CORES]),
+            "alive_hours": float(s[I_OBS_ALIVE_HOURS]),
+            "spont_deaths": float(s[I_OBS_SPONT_DEATHS]),
+            "departed": float(s[I_OBS_DEPARTED]),
+        },
+        "arr_placed": placed,
+        "arr_c0_mean": mean_c0,
+        "arr_c0_var": max(var_c0, 0.0),
+    }
+    if fleet:
+        out["per_cluster"] = {
+            "n_routed": host.scalars[:, I_N_ROUTED].tolist(),
+            "n_admit": host.scalars[:, I_N_ADMIT].tolist(),
+        }
+    return out

@@ -1,0 +1,74 @@
+"""Shared library logger: ``repro.obs.log.get_logger(__name__)``.
+
+Library modules (trace fitting, synthesis, importance planning, the online
+engine) emit diagnostics through one ``repro``-rooted stdlib logger instead
+of ad-hoc ``print`` calls, so they are **silent by default** — under pytest,
+as an imported dependency, in benchmark CSV output — and turn on uniformly:
+
+  * ``REPRO_LOG_LEVEL=DEBUG`` (or ``INFO``/``WARNING``/...) in the
+    environment configures the root ``repro`` logger at import time.
+  * ``set_level("INFO")`` does the same programmatically — the admission
+    daemon calls it so its operational log is visible as a CLI.
+
+The handler writes single-line ``LEVEL repro.mod: message`` records to
+stderr, leaving stdout to CSV rows and CLI output. Applications that
+configure ``logging`` themselves win: the ``repro`` logger only installs
+its own handler when nobody else has."""
+from __future__ import annotations
+
+import logging
+import os
+import sys
+
+_ROOT_NAME = "repro"
+_ENV_VAR = "REPRO_LOG_LEVEL"
+_DEFAULT_LEVEL = logging.WARNING
+
+_FORMAT = "%(levelname)s %(name)s: %(message)s"
+
+
+def _root() -> logging.Logger:
+    return logging.getLogger(_ROOT_NAME)
+
+
+def _ensure_configured() -> logging.Logger:
+    root = _root()
+    if not getattr(root, "_repro_obs_configured", False):
+        if not root.handlers and not logging.getLogger().handlers:
+            handler = logging.StreamHandler(sys.stderr)
+            handler.setFormatter(logging.Formatter(_FORMAT))
+            root.addHandler(handler)
+            root.propagate = False
+        env = os.environ.get(_ENV_VAR)
+        root.setLevel(_level_of(env) if env else _DEFAULT_LEVEL)
+        root._repro_obs_configured = True  # type: ignore[attr-defined]
+    return root
+
+
+def _level_of(level) -> int:
+    if isinstance(level, int):
+        return level
+    value = logging.getLevelName(str(level).upper())
+    if not isinstance(value, int):
+        raise ValueError(f"unknown log level {level!r}")
+    return value
+
+
+def set_level(level) -> None:
+    """Set the ``repro`` root logger level (name like ``"DEBUG"`` or an
+    int). Overrides the ``REPRO_LOG_LEVEL`` environment default."""
+    _ensure_configured().setLevel(_level_of(level))
+
+
+def get_logger(name: str | None = None) -> logging.Logger:
+    """The ``repro``-rooted logger for ``name`` (usually ``__name__``).
+
+    Any dotted name is parented under ``repro`` (``repro.traces.fit`` stays
+    itself; ``benchmarks.run`` becomes ``repro.benchmarks.run``), so one
+    level/handler configuration governs every library module."""
+    root = _ensure_configured()
+    if not name or name == _ROOT_NAME:
+        return root
+    if not name.startswith(_ROOT_NAME + "."):
+        name = f"{_ROOT_NAME}.{name}"
+    return logging.getLogger(name)

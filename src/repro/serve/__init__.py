@@ -6,9 +6,11 @@ from .admission import (Arrival, ExternalEvents, OnlineAdmissionEngine,
                         format_operating_derived, load_operating_point,
                         operating_row_name)
 from .engine import Request, ServeEngine
+from ..obs.export import MetricsServer, snapshot_to_prometheus
 
 __all__ = [
     "Arrival", "ExternalEvents", "OnlineAdmissionEngine", "OperatingPoint",
     "default_policy_param", "format_operating_derived",
     "load_operating_point", "operating_row_name", "Request", "ServeEngine",
+    "MetricsServer", "snapshot_to_prometheus",
 ]

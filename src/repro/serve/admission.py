@@ -38,6 +38,7 @@ import json
 import os
 import re
 import threading
+import time
 import warnings
 from concurrent.futures import Future
 from typing import NamedTuple, Optional
@@ -49,6 +50,9 @@ import numpy as np
 from ..core.belief import belief_from_prior, observe_initial_size
 from ..core.policies import PolicyParams
 from ..core.processes import DeploymentParams, sample_params
+from ..obs.counters import WindowStats, fold_window, telemetry_summary
+from ..obs.export import HostHistogram, log_buckets
+from ..obs.tracing import DecisionTracer, annotate
 from ..sim.core import (ArrivalStream, CoreState, FleetConfig, SimConfig,
                         StepOutcome, make_admission_core)
 from ..sim.simulator import (_accumulate_step, _cluster_step_keys,
@@ -131,11 +135,21 @@ class OnlineAdmissionEngine:
     (leading ``[C]`` axis + routing). ``naive=True`` selects the ablation
     front-end: one full aggregate recompute + width-1 decision per request
     (what admission costs without the maintained incremental aggregate).
+
+    Observability: with ``cfg.telemetry`` the ``CoreState`` carries the
+    device telemetry rider through every step, and ``metrics_snapshot()``
+    exports it (plus host-side decision-latency / flush-batch-size
+    histograms and queue/pump gauges) without synchronizing the pump —
+    that is what the daemon's ``/metrics`` endpoint serves. An attached
+    ``obs.tracing.DecisionTracer`` additionally receives one structured
+    record per ``submit``-path decision (single-cluster engines include
+    the policy score via the traced decide path).
     """
 
     def __init__(self, cfg, grid, policy_kind: int, policy: PolicyParams, *,
                  router=None, micro_batch: Optional[int] = None,
-                 naive: bool = False, scale: Optional[str] = None):
+                 naive: bool = False, scale: Optional[str] = None,
+                 tracer: Optional[DecisionTracer] = None):
         self.fleet = isinstance(cfg, FleetConfig)
         base = cfg.base if self.fleet else cfg
         if scale is not None:
@@ -179,10 +193,31 @@ class OnlineAdmissionEngine:
         self._pad = self._pad_template()
 
         # -- micro-batch front-end ------------------------------------------
-        self._pending: list = []                  # [(Arrival, Future)]
+        self._pending: list = []                  # [(Arrival, Future, t_sub)]
         self._lock = threading.Lock()
         self._pump: Optional[threading.Thread] = None
         self._stop = threading.Event()
+
+        # -- observability --------------------------------------------------
+        # one reentrant lock serializes every jit-call-and-reassign of the
+        # donated CoreState against metrics_snapshot's jnp.copy — without it
+        # a snapshot racing the pump could read already-donated buffers
+        self._state_lock = threading.RLock()
+        self.tracer = tracer
+        self._hist_latency = HostHistogram()      # submit->decision, seconds
+        self._hist_batch = HostHistogram(
+            log_buckets(1.0, float(max(self.width, 2)), 8))
+        self.n_flushes = 0
+        self.n_refreshes = 0
+        self._pump_idle_s = 0.0
+        self._pump_busy_s = 0.0
+        self._req_id = 0
+        self._last_diag = None                    # DecisionDiag of last slice
+        self._policy_info = {
+            "kind": np.asarray(policy.kind).tolist(),
+            "threshold": np.asarray(policy.threshold).tolist(),
+            "rho": np.asarray(policy.rho).tolist(),
+        }
 
         self._build_jit()
 
@@ -209,6 +244,16 @@ class OnlineAdmissionEngine:
                 return cs, accept, util
 
             self._j_decide = jax.jit(decide, donate_argnums=(1,))
+
+            def decide_traced(policy, cs, util, batch, valid):
+                cand = core.candidates(batch)
+                cs, accept, diag = core.decide_batch_traced(
+                    policy, cs, util, cand, batch, valid)
+                util = jnp.sum(cs.slots.cores
+                               * cs.slots.alive.astype(jnp.float32))
+                return cs, accept, util, diag
+
+            self._j_decide_traced = jax.jit(decide_traced, donate_argnums=(1,))
 
             def naive_decide(policy, cs, util, batch, valid):
                 # ablation: full O(slots * grid) aggregate recompute, then a
@@ -303,8 +348,19 @@ class OnlineAdmissionEngine:
             state.bel, core_deaths=deaths, exposure_core_hours=exposure,
             n_scaleouts=n_req, scaleout_cores=req,
             alive_hours=cfg.dt * alive_f, priors=cfg.priors)
+        tel = cs.tel
+        if cfg.telemetry:
+            spont = jnp.sum((ev.spont_death & state.alive)
+                            .astype(jnp.float32))
+            tel = fold_window(tel, util, capacity, WindowStats(
+                core_deaths=jnp.sum(deaths),
+                exposure_core_hours=jnp.sum(exposure),
+                n_scaleouts=jnp.sum(n_req),
+                scaleout_cores=jnp.sum(req),
+                alive_hours=cfg.dt * jnp.sum(alive_f),
+                spont_deaths=spont, departed=departed))
         cs = cs._replace(slots=state._replace(alive=alive, cores=cores,
-                                              bel=bel))
+                                              bel=bel), tel=tel)
         return cs, StepOutcome(util=util, failed=failed,
                                n_requests=jnp.sum(n_req), departed=departed)
 
@@ -322,30 +378,36 @@ class OnlineAdmissionEngine:
         """
         if (key is None) == (events is None):
             raise ValueError("tick() needs exactly one of key= or events=")
-        self._close_window()
-        if self.ticks % self.k_refresh == 0 and not self.naive:
-            self._cs = self._j_refresh(self._cs)
-        if events is not None:
-            ev = jax.tree.map(jnp.asarray, events)
-            self._cs, self._out = self._j_ingest(self._caps, self._cs, ev)
-            self._step_key = jax.random.PRNGKey(self.ticks)
-        else:
-            self._cs, self._out = self._j_tick(key, self._cs)
-            self._step_key = key
-        self._util = self._out.util
-        self._acc = self._rej = 0.0
-        self.ticks += 1
+        with self._state_lock:
+            self._close_window()
+            if self.ticks % self.k_refresh == 0 and not self.naive:
+                with annotate("repro.engine.refresh"):
+                    self._cs = self._j_refresh(self._cs)
+                self.n_refreshes += 1
+            with annotate("repro.engine.tick"):
+                if events is not None:
+                    ev = jax.tree.map(jnp.asarray, events)
+                    self._cs, self._out = self._j_ingest(self._caps,
+                                                         self._cs, ev)
+                    self._step_key = jax.random.PRNGKey(self.ticks)
+                else:
+                    self._cs, self._out = self._j_tick(key, self._cs)
+                    self._step_key = key
+            self._util = self._out.util
+            self._acc = self._rej = 0.0
+            self.ticks += 1
 
     def _close_window(self):
-        if self._out is None:
-            return
-        slots, util_end = self._j_close(self._cs, self._out,
-                                        jnp.asarray(self._acc, jnp.float32),
-                                        jnp.asarray(self._rej, jnp.float32))
-        self._cs = self._cs._replace(slots=slots)
-        self._util_trace.append(util_end)
-        self._fail_trace.append(self._out.failed)
-        self._out = None
+        with self._state_lock:
+            if self._out is None:
+                return
+            slots, util_end = self._j_close(
+                self._cs, self._out, jnp.asarray(self._acc, jnp.float32),
+                jnp.asarray(self._rej, jnp.float32))
+            self._cs = self._cs._replace(slots=slots)
+            self._util_trace.append(util_end)
+            self._fail_trace.append(self._out.failed)
+            self._out = None
 
     # ------------------------------------------------- micro-batch frontend
 
@@ -355,7 +417,7 @@ class OnlineAdmissionEngine:
         over plain numpy scalars, the engine thread does all jax work."""
         fut: Future = Future()
         with self._lock:
-            self._pending.append((arrival, fut))
+            self._pending.append((arrival, fut, time.monotonic()))
         return fut
 
     @property
@@ -374,12 +436,42 @@ class OnlineAdmissionEngine:
         if not pending:
             return 0
         chunk = 1 if self.naive else self.width
-        for i in range(0, len(pending), chunk):
-            part = pending[i:i + chunk]
-            accept = self._decide([a for a, _ in part])
-            for (_, fut), ok in zip(part, accept):
-                fut.set_result(bool(ok))
+        with annotate("repro.engine.flush"):
+            for i in range(0, len(pending), chunk):
+                part = pending[i:i + chunk]
+                accept = self._decide([a for a, _, _ in part])
+                self._trace_part(part, accept)
+                for (_, fut, _), ok in zip(part, accept):
+                    fut.set_result(bool(ok))
+        with self._state_lock:
+            self.n_flushes += 1
         return len(pending)
+
+    def _trace_part(self, part: list, accept: np.ndarray) -> None:
+        """Record one decided micro-batch chunk: submit→decision latency
+        into the host histogram, plus (when a tracer is attached) one
+        structured record per decision with the policy score/threshold from
+        the traced decide path."""
+        t_dec = time.monotonic()
+        diag = self._last_diag
+        with self._state_lock:
+            self._hist_batch.observe(float(len(part)))
+            for j, ((_, _, t_sub), ok) in enumerate(zip(part, accept)):
+                self._hist_latency.observe(t_dec - t_sub)
+                if self.tracer is None:
+                    continue
+                self._req_id += 1
+                rec = dict(step=self.ticks, req_id=self._req_id,
+                           policy_kind=self._policy_info["kind"],
+                           verdict=bool(ok), latency_s=t_dec - t_sub,
+                           batch_size=len(part))
+                if diag is not None:
+                    rec["score"] = diag.score[j]
+                    rec["threshold"] = diag.threshold[j]
+                    rec["fits"] = diag.fits[j]
+                else:
+                    rec["threshold"] = self._policy_info["threshold"]
+                self.tracer.record(**rec)
 
     def decide_slice(self, stream_t: ArrivalStream,
                      valid: np.ndarray) -> np.ndarray:
@@ -391,23 +483,30 @@ class OnlineAdmissionEngine:
             raise RuntimeError("decide_slice() before the first tick()")
         valid = jnp.asarray(valid)
         fn = self._j_naive if self.naive else self._j_decide
-        if not self.fleet:
-            self._cs, accept, self._util = fn(
-                self.policy, self._cs, self._util, stream_t, valid)
-            accept = np.asarray(accept)
-            n_acc = float(np.sum(accept))
-            self._acc += n_acc
-            self._rej += float(np.sum(np.asarray(valid))) - n_acc
-        else:
-            rkey = jax.random.fold_in(self._step_key, self.n_c)
-            (self._cs, accept_c, self._util, n_acc, n_rej,
-             self._rej_all) = fn(
-                self.policy, self._cs, self._util, stream_t, valid, rkey,
-                jnp.asarray(self._rej_all, jnp.float32))
-            self._acc = self._acc + np.asarray(n_acc)
-            self._rej = self._rej + np.asarray(n_rej)
-            accept = np.asarray(jnp.any(accept_c, axis=0))
-        self.decisions += int(np.sum(np.asarray(valid)))
+        with self._state_lock:
+            self._last_diag = None
+            if not self.fleet:
+                if self.tracer is not None and not self.naive:
+                    self._cs, accept, self._util, self._last_diag = \
+                        self._j_decide_traced(self.policy, self._cs,
+                                              self._util, stream_t, valid)
+                else:
+                    self._cs, accept, self._util = fn(
+                        self.policy, self._cs, self._util, stream_t, valid)
+                accept = np.asarray(accept)
+                n_acc = float(np.sum(accept))
+                self._acc += n_acc
+                self._rej += float(np.sum(np.asarray(valid))) - n_acc
+            else:
+                rkey = jax.random.fold_in(self._step_key, self.n_c)
+                (self._cs, accept_c, self._util, n_acc, n_rej,
+                 self._rej_all) = fn(
+                    self.policy, self._cs, self._util, stream_t, valid, rkey,
+                    jnp.asarray(self._rej_all, jnp.float32))
+                self._acc = self._acc + np.asarray(n_acc)
+                self._rej = self._rej + np.asarray(n_rej)
+                accept = np.asarray(jnp.any(accept_c, axis=0))
+            self.decisions += int(np.sum(np.asarray(valid)))
         return accept
 
     def _decide(self, arrivals: list) -> np.ndarray:
@@ -443,10 +542,13 @@ class OnlineAdmissionEngine:
 
         def loop():
             while not self._stop.is_set():
+                t0 = time.monotonic()
                 if self.n_pending:
                     self.flush()
+                    self._pump_busy_s += time.monotonic() - t0
                 else:
                     self._stop.wait(interval_s)
+                    self._pump_idle_s += time.monotonic() - t0
 
         self._pump = threading.Thread(target=loop, daemon=True)
         self._pump.start()
@@ -485,6 +587,38 @@ class OnlineAdmissionEngine:
             self.base, self._caps, self._cs.slots, util_trace.T,
             fail_trace.T, jnp.asarray(self._rej_all, jnp.float32),
             horizon_hours=horizon))
+
+    def metrics_snapshot(self) -> dict:
+        """Non-blocking observability snapshot: engine counters, the
+        decision-latency / flush-batch-size host histograms, and (with
+        ``cfg.telemetry``) the device telemetry rider's summary.
+
+        Unlike ``metrics()`` this never closes the open window, never
+        flushes, and never synchronizes with the pump: it holds the state
+        lock only long enough to dispatch a ``jnp.copy`` of the telemetry
+        leaves (async, cheap) and to snapshot the host histograms, then
+        materializes the copy outside the lock — a Prometheus scrape cannot
+        stall admission. Safe from any thread."""
+        with self._state_lock:
+            tel = self._cs.tel
+            tel_copy = (jax.tree.map(jnp.copy, tel)
+                        if tel is not None else None)
+            idle, busy = self._pump_idle_s, self._pump_busy_s
+            eng = {
+                "n_requests": self.decisions,
+                "n_flushes": self.n_flushes,
+                "n_refreshes": self.n_refreshes,
+                "n_ticks": self.ticks,
+                "queue_depth": self.n_pending,
+                "pump_idle_fraction": (idle / (idle + busy)
+                                       if idle + busy > 0 else 0.0),
+                "decision_latency_seconds": self._hist_latency.snapshot(),
+                "flush_batch_size": self._hist_batch.snapshot(),
+            }
+        snap = {"engine": eng}
+        if tel_copy is not None:
+            snap["telemetry"] = telemetry_summary(tel_copy)
+        return snap
 
 
 # ---------------------------------------------------------------------------

@@ -22,6 +22,7 @@ from .importance import (ImportancePlan, TraceEnsemblePlan, badness_measure,
                          estimate_from_plan, make_importance_plan,
                          make_trace_ensemble_plan, rejection_q, simulate_plan,
                          simulate_trace_plan, stream_badness)
+from ..obs.counters import TelemetryState, telemetry_summary
 
 __all__ = [
     "AGG_FUSED", "AGG_KERNEL", "AGG_REFERENCE", "GLOBAL", "PSEUDO",
@@ -39,4 +40,5 @@ __all__ = [
     "TraceEnsemblePlan", "badness_measure", "estimate_from_plan",
     "make_importance_plan", "make_trace_ensemble_plan", "rejection_q",
     "simulate_plan", "simulate_trace_plan", "stream_badness",
+    "TelemetryState", "telemetry_summary",
 ]

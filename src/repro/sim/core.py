@@ -43,8 +43,11 @@ from ..core.belief import (GammaBelief, apply_pseudo_observations,
                            update_on_events)
 from ..core.moments import (MomentCurves, aggregate_moment_curves,
                             moment_curves, moment_curves_fused)
-from ..core.policies import ZEROTH, PolicyParams, admit_sequential
+from ..core.policies import (ZEROTH, PolicyParams, admit_sequential,
+                             admit_sequential_verbose)
 from ..core.pricing import mixture_moments
+from ..obs.counters import (TelemetryState, WindowStats, fold_decisions,
+                            fold_window, init_telemetry, mark_refresh)
 from ..core.processes import (DeploymentParams, PopulationPriors,
                               sample_params, sample_pseudo_observations,
                               sample_step_events)
@@ -76,6 +79,14 @@ class SimConfig(NamedTuple):
                                      # (K=1: recompute every step)
     priors: PopulationPriors = None  # population priors; prefer make_config,
                                      # which defaults these to AZURE_PRIORS
+    telemetry: bool = False          # carry the obs.counters.TelemetryState
+                                     # rider through every step: decision
+                                     # reason counters, occupancy/headroom/
+                                     # staleness histograms, observables
+                                     # sufficient statistics. False (the
+                                     # default) compiles the rider out
+                                     # entirely — decisions and metrics are
+                                     # bit-identical either way
 
     @property
     def n_steps(self) -> int:
@@ -277,11 +288,16 @@ class CoreState(NamedTuple):
     incrementally-maintained cluster-wide aggregate moment curves. One
     pytree, so a long-lived engine can keep it device-resident and donate it
     through every jitted step (the fleet gives every leaf a leading ``[C]``
-    cluster axis)."""
+    cluster axis).
+
+    ``tel`` is the optional telemetry rider (``obs.counters.TelemetryState``):
+    ``None`` — an empty pytree node, adding no buffers to the compiled
+    programs — unless ``SimConfig(telemetry=True)``."""
 
     slots: SimState
     agg_el: jax.Array             # [N] aggregate E[L_n] over admitted slots
     agg_vl: jax.Array             # [N] aggregate V[L_n]
+    tel: Optional["TelemetryState"] = None
 
 
 class StepOutcome(NamedTuple):
@@ -428,14 +444,17 @@ def _make_candidates_fn(cfg: SimConfig, grid: jax.Array, needs_moments: bool,
     return candidates
 
 
-def _step_dynamics(cfg: SimConfig, capacity, key, state: SimState):
+def _step_dynamics(cfg: SimConfig, capacity, key, state: SimState,
+                   with_stats: bool = False):
     """Steps 1–3 of one ``dt``-hour step for ONE cluster: deaths, scale-out
     grants against ``capacity`` (a traced value — the fleet passes each
     cluster's own), and conjugate belief updates.
 
-    Returns ``(state, util, failed, n_req_total, departed)`` with the slot
-    arrays updated and the metric counters untouched (the caller accumulates
-    them after admission).
+    Returns ``(state, util, failed, n_req_total, departed, stats)`` with the
+    slot arrays updated and the metric counters untouched (the caller
+    accumulates them after admission). ``stats`` is the window's observable
+    sufficient statistics (``WindowStats``) when ``with_stats`` — the
+    telemetry rider's drift-detector stream — else ``None``.
     """
     alive_f = state.alive.astype(jnp.float32)
 
@@ -448,6 +467,7 @@ def _step_dynamics(cfg: SimConfig, capacity, key, state: SimState):
     cores = jnp.where(ev.spont_death & state.alive, 0.0, cores)
     alive = state.alive & (cores > 0.0)
     departed = jnp.sum((state.alive & ~alive).astype(jnp.float32))
+    spont = jnp.sum((ev.spont_death & state.alive).astype(jnp.float32))
     alive_f = alive.astype(jnp.float32)
 
     # 2. scale-outs (only deployments still alive request) ---------------
@@ -470,27 +490,18 @@ def _step_dynamics(cfg: SimConfig, capacity, key, state: SimState):
         priors=cfg.priors,
     )
     state = state._replace(alive=alive, cores=cores, bel=bel)
-    return state, util, failed, jnp.sum(n_req), departed
-
-
-def _admit_place_fold(cfg: SimConfig, policy: PolicyParams, state: SimState,
-                      agg_el, agg_vl, util, cand: MomentCurves,
-                      stream_t: ArrivalStream, valid):
-    """Step 4 for ONE cluster: sequential admission of the (cluster-masked)
-    candidates against the maintained aggregate, slot placement, and the
-    incremental aggregate fold of *placed* arrivals.
-
-    Folds only arrivals that actually landed in a slot into the carried
-    aggregate — accepted-but-overflowed ones never became deployments (the
-    seed's per-step recompute likewise only ever saw placed slots).
-    """
-    res = admit_sequential(policy, agg_el, agg_vl, util, cand,
-                           stream_t.c0, valid)
-    state, placed_arrival = _place_arrivals(state, res.accept, stream_t, cfg)
-    placed_f = placed_arrival.astype(jnp.float32)
-    agg_el = agg_el + jnp.einsum("an,a->n", cand.EL, placed_f)
-    agg_vl = agg_vl + jnp.einsum("an,a->n", cand.VL, placed_f)
-    return state, agg_el, agg_vl, res.accept
+    stats = None
+    if with_stats:
+        stats = WindowStats(
+            core_deaths=jnp.sum(deaths),
+            exposure_core_hours=jnp.sum(exposure),
+            n_scaleouts=jnp.sum(n_req),
+            scaleout_cores=jnp.sum(req),
+            alive_hours=cfg.dt * jnp.sum(alive_f),
+            spont_deaths=spont,
+            departed=departed,
+        )
+    return state, util, failed, jnp.sum(n_req), departed, stats
 
 
 class AdmissionCore(NamedTuple):
@@ -509,6 +520,7 @@ class AdmissionCore(NamedTuple):
     apply_events: Callable[..., tuple]
     candidates: Callable[[ArrivalStream], MomentCurves]
     decide_batch: Callable[..., tuple]
+    decide_batch_traced: Callable[..., tuple]
 
 
 def make_admission_core(cfg: SimConfig, grid: jax.Array,
@@ -531,43 +543,85 @@ def make_admission_core(cfg: SimConfig, grid: jax.Array,
     def init() -> CoreState:
         return CoreState(slots=_init_state(cfg),
                          agg_el=jnp.zeros((n_grid,)),
-                         agg_vl=jnp.zeros((n_grid,)))
+                         agg_vl=jnp.zeros((n_grid,)),
+                         tel=init_telemetry() if cfg.telemetry else None)
 
     def refresh_aggregates(cs: CoreState) -> CoreState:
         """Full aggregate recompute from the slot table (block boundary).
         Zeroth-moment policies never read the curves, so their refresh
-        keeps the zero placeholder instead of paying for the reduction."""
+        keeps the zero placeholder instead of paying for the reduction.
+        With telemetry the rider's staleness clock returns to zero."""
+        tel = mark_refresh(cs.tel) if cfg.telemetry else cs.tel
         if not needs_moments:
             return cs._replace(agg_el=jnp.zeros((n_grid,)),
-                               agg_vl=jnp.zeros((n_grid,)))
+                               agg_vl=jnp.zeros((n_grid,)), tel=tel)
         agg_el, agg_vl = aggregate_fn(cs.slots.bel, cs.slots.cores,
                                       cs.slots.alive)
-        return cs._replace(agg_el=agg_el, agg_vl=agg_vl)
+        return cs._replace(agg_el=agg_el, agg_vl=agg_vl, tel=tel)
 
     def apply_events(key: jax.Array, cs: CoreState, capacity=None):
         """One ``dt``-hour step of cluster dynamics: deaths, scale-out
         grants against ``capacity`` (defaults to the config's own; the
         fleet passes each cluster's), and conjugate belief updates. The
         maintained aggregate is NOT touched — within-block staleness is the
-        ``agg_refresh_steps`` contract."""
+        ``agg_refresh_steps`` contract. With telemetry the rider folds the
+        window's occupancy and observable sufficient statistics."""
         cap = cfg.capacity if capacity is None else capacity
-        slots, util, failed, n_req, departed = _step_dynamics(
-            cfg, cap, key, cs.slots)
-        return cs._replace(slots=slots), StepOutcome(
+        slots, util, failed, n_req, departed, stats = _step_dynamics(
+            cfg, cap, key, cs.slots, with_stats=cfg.telemetry)
+        tel = cs.tel
+        if cfg.telemetry:
+            tel = fold_window(tel, util, cap, stats)
+        return cs._replace(slots=slots, tel=tel), StepOutcome(
             util=util, failed=failed, n_requests=n_req, departed=departed)
+
+    def _decide_core(policy: PolicyParams, cs: CoreState, util,
+                     cand: MomentCurves, stream_t: ArrivalStream, valid,
+                     verbose: bool):
+        if verbose or cfg.telemetry:
+            res, diag = admit_sequential_verbose(
+                policy, cs.agg_el, cs.agg_vl, util, cand, stream_t.c0, valid)
+        else:
+            res = admit_sequential(policy, cs.agg_el, cs.agg_vl, util, cand,
+                                   stream_t.c0, valid)
+            diag = None
+        slots, placed_arrival = _place_arrivals(cs.slots, res.accept,
+                                                stream_t, cfg)
+        placed_f = placed_arrival.astype(jnp.float32)
+        agg_el = cs.agg_el + jnp.einsum("an,a->n", cand.EL, placed_f)
+        agg_vl = cs.agg_vl + jnp.einsum("an,a->n", cand.VL, placed_f)
+        tel = cs.tel
+        if cfg.telemetry:
+            tel = fold_decisions(tel, res.accept, valid, diag.fits,
+                                 placed_arrival, stream_t.c0)
+        return CoreState(slots=slots, agg_el=agg_el, agg_vl=agg_vl,
+                         tel=tel), res.accept, diag
 
     def decide_batch(policy: PolicyParams, cs: CoreState, util,
                      cand: MomentCurves, stream_t: ArrivalStream, valid):
         """Greedy first-come-first-served admission of a candidate batch
-        against the maintained aggregate, slot placement, and the
-        incremental fold of placed arrivals. Returns (cs, accept [A])."""
-        slots, agg_el, agg_vl, accept = _admit_place_fold(
-            cfg, policy, cs.slots, cs.agg_el, cs.agg_vl, util, cand,
-            stream_t, valid)
-        return CoreState(slots=slots, agg_el=agg_el, agg_vl=agg_vl), accept
+        against the maintained aggregate (sequential, paper Assumption 3),
+        slot placement, and the incremental aggregate fold of *placed*
+        arrivals — accepted-but-overflowed ones never became deployments,
+        so they must not haunt the carried aggregate. Returns
+        (cs, accept [A]). With telemetry the rider folds the batch's reason
+        counters and the admitted-arrival stream moments."""
+        cs, accept, _ = _decide_core(policy, cs, util, cand, stream_t, valid,
+                                     verbose=False)
+        return cs, accept
+
+    def decide_batch_traced(policy: PolicyParams, cs: CoreState, util,
+                            cand: MomentCurves, stream_t: ArrivalStream,
+                            valid):
+        """``decide_batch`` + the per-candidate ``DecisionDiag`` (``[A]``:
+        fit flag, policy score, bound) for decision tracing. Returns
+        (cs, accept, diag); decisions identical to ``decide_batch``."""
+        return _decide_core(policy, cs, util, cand, stream_t, valid,
+                            verbose=True)
 
     return AdmissionCore(cfg=cfg, grid=grid, policy_kind=policy_kind,
                          needs_moments=needs_moments, n_grid=n_grid,
                          init=init, refresh_aggregates=refresh_aggregates,
                          apply_events=apply_events, candidates=candidates_fn,
-                         decide_batch=decide_batch)
+                         decide_batch=decide_batch,
+                         decide_batch_traced=decide_batch_traced)

@@ -39,10 +39,13 @@ import numpy as np
 
 from ..core.belief import GammaBelief
 from ..core.moments import moment_curves_fused
+from ..obs.log import get_logger
 from .metrics import sla_failure_rate, weighted_mean
 from .simulator import (ArrivalSource, ArrivalStream, RunMetrics, SimConfig,
                         draw_arrival_stream, run_keyed_batch,
                         shard_batch_over_devices, stream_config)
+
+log = get_logger(__name__)
 
 HOURS_PER_MONTH = 730.0
 
@@ -233,6 +236,10 @@ def make_importance_plan(
             sel_keys.append(np.asarray(keys[j]))
             sel_w.append(p_hat[i] / len(idx))
             sel_b.append(i)
+    counts = np.bincount(np.asarray(sel_b), minlength=k_buckets)
+    log.debug("importance plan: %d runs over buckets=%s p_hat=%s "
+              "(probed %d)", len(sel_keys), counts.tolist(),
+              np.round(p_hat, 4).tolist(), n_probe)
     return ImportancePlan(
         keys=np.stack(sel_keys),
         weights=np.asarray(sel_w),
@@ -338,6 +345,10 @@ def make_trace_ensemble_plan(
                 sel_keys.append(run_keys[j, r])
                 sel_w.append(w)
                 sel_b.append(i)
+    counts = np.bincount(np.asarray(sel_b), minlength=k_buckets)
+    log.debug("trace-ensemble plan: %d runs (%d traces x %d keys) over "
+              "buckets=%s p_hat=%s", len(sel_keys), len(set(sel_idx)),
+              runs_per_trace, counts.tolist(), np.round(p_hat, 4).tolist())
     return TraceEnsemblePlan(
         trace_idx=np.asarray(sel_idx),
         keys=np.stack(sel_keys),

@@ -198,6 +198,10 @@ def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int,
     precedence over the source. With ``record_decisions=True`` the run
     returns ``(RunMetrics, accept [T, A])`` — the per-step admit/reject
     decisions, which is what the online/offline equivalence tests compare.
+    With ``cfg.telemetry`` the final ``obs.counters.TelemetryState`` rider is
+    appended as one more return element (``(metrics, tel)``, or
+    ``(metrics, accept, tel)`` when also recording decisions); decisions and
+    metrics are bit-identical with the rider on or off.
 
     The scan is blocked by ``cfg.agg_refresh_steps`` (= K): the cluster-wide
     aggregate moment curves are fully recomputed from the slot array once per
@@ -258,10 +262,12 @@ def make_run(cfg: SimConfig, horizon_grid: jax.Array, policy_kind: int,
         metrics = _run_metrics(cfg, cs.slots,
                                util_trace.reshape(cfg.n_steps),
                                fail_trace.reshape(cfg.n_steps))
+        out = (metrics,)
         if record_decisions:
-            accept = traces[2].reshape(cfg.n_steps, cfg.max_arrivals)
-            return metrics, accept
-        return metrics
+            out += (traces[2].reshape(cfg.n_steps, cfg.max_arrivals),)
+        if cfg.telemetry:
+            out += (cs.tel,)
+        return out if len(out) > 1 else metrics
 
     return run
 
@@ -342,7 +348,10 @@ def make_fleet_run(fcfg: FleetConfig, horizon_grid: jax.Array,
     not match ``FleetConfig.capacities`` per cluster (a tiled fleet-total
     would let every cluster admit against the whole fleet's budget). With
     ``record_decisions=True`` the run returns ``(FleetMetrics,
-    accept [T, C, A], assign [T, A])``.
+    accept [T, C, A], assign [T, A])``. With ``fcfg.base.telemetry`` the
+    final per-cluster ``TelemetryState`` rider (every leaf ``[C]``-leading;
+    ``n_routed`` across clusters is the routing count vector) is appended as
+    one more return element.
 
     Each step: per-cluster dynamics (the core's ``apply_events`` against the
     cluster's own capacity, vmapped over the cluster axis with independent
@@ -431,11 +440,13 @@ def make_fleet_run(fcfg: FleetConfig, horizon_grid: jax.Array,
         fail_trace = traces[1].reshape(cfg.n_steps, n_c).T
         metrics = _fleet_metrics(cfg, caps, cs.slots, util_trace, fail_trace,
                                  rej_all)
+        out = (metrics,)
         if record_decisions:
-            accept = traces[2].reshape(cfg.n_steps, n_c, cfg.max_arrivals)
-            assign = traces[3].reshape(cfg.n_steps, cfg.max_arrivals)
-            return metrics, accept, assign
-        return metrics
+            out += (traces[2].reshape(cfg.n_steps, n_c, cfg.max_arrivals),
+                    traces[3].reshape(cfg.n_steps, cfg.max_arrivals))
+        if cfg.telemetry:
+            out += (cs.tel,)
+        return out if len(out) > 1 else metrics
 
     def run(key: jax.Array, policy: PolicyParams,
             stream: Optional[ArrivalStream] = None):

@@ -28,7 +28,10 @@ import numpy as np
 from scipy.special import polygamma, psi
 
 from ..core.processes import PopulationPriors
+from ..obs.log import get_logger
 from .schema import WorkloadTrace, has_latents
+
+log = get_logger(__name__)
 
 _MIN_SAMPLES = 8
 
@@ -210,6 +213,11 @@ def fit_priors(trace: WorkloadTrace, *, source: str = "auto",
         delta=delta, nu=float(nu),
     )
     diag["nu"] = float(nu)
+    log.debug(
+        "fit_priors source=%s n=%d: mu=(%.4g,%.4g) lam=(%.4g,%.4g) "
+        "sig=(%.4g,%.4g) delta=%.4g nu=%.3f", source,
+        diag["n_deployments"], mu_shape, mu_rate, lam_shape, lam_rate,
+        sig_shape, sig_rate, delta, nu)
     return fitted, diag
 
 

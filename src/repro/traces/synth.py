@@ -45,7 +45,10 @@ import jax.numpy as jnp
 from ..core.processes import (AZURE_PRIORS, DeploymentParams,
                               PopulationPriors, fast_binomial, fast_poisson,
                               sample_params, scaleout_rate)
+from ..obs.log import get_logger
 from .schema import ScaleoutEvents, WorkloadTrace
+
+log = get_logger(__name__)
 
 
 class TraceSpec(NamedTuple):
@@ -243,6 +246,9 @@ def scenario_names() -> tuple[str, ...]:
 
 def synthesize_scenario(key: jax.Array, name: str,
                         spec: TraceSpec) -> WorkloadTrace:
+    log.debug("synthesize_scenario %r: horizon=%gh rate=%g max_deployments=%d",
+              name, spec.horizon_hours, spec.arrival_rate,
+              spec.max_deployments)
     return get_scenario(name).synth(key, spec)
 
 
