@@ -23,8 +23,8 @@ import os
 import sys
 import time
 
-from . import (ablation_marginal, fig1_priors, fig2_pricing, fleet_bench,
-               kernels_bench, roofline, scenarios, serve_bench,
+from . import (ablation_marginal, drift_bench, fig1_priors, fig2_pricing,
+               fleet_bench, kernels_bench, roofline, scenarios, serve_bench,
                table2_policies, tuning_bench)
 
 MODULES = {
@@ -38,6 +38,7 @@ MODULES = {
     "fleet": fleet_bench,
     "tuning": tuning_bench,
     "serve": serve_bench,
+    "drift": drift_bench,
 }
 
 

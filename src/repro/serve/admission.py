@@ -143,13 +143,16 @@ class OnlineAdmissionEngine:
     that is what the daemon's ``/metrics`` endpoint serves. An attached
     ``obs.tracing.DecisionTracer`` additionally receives one structured
     record per ``submit``-path decision (single-cluster engines include
-    the policy score via the traced decide path).
+    the policy score via the traced decide path), and an attached
+    ``tuning.drift.DriftDetector`` is fed the between-scrape observable
+    deltas so prior drift surfaces on the same endpoint.
     """
 
     def __init__(self, cfg, grid, policy_kind: int, policy: PolicyParams, *,
                  router=None, micro_batch: Optional[int] = None,
                  naive: bool = False, scale: Optional[str] = None,
-                 tracer: Optional[DecisionTracer] = None):
+                 tracer: Optional[DecisionTracer] = None,
+                 drift_detector=None):
         self.fleet = isinstance(cfg, FleetConfig)
         base = cfg.base if self.fleet else cfg
         if scale is not None:
@@ -213,6 +216,15 @@ class OnlineAdmissionEngine:
         self._pump_busy_s = 0.0
         self._req_id = 0
         self._last_diag = None                    # DecisionDiag of last slice
+        # live drift detection: a tuning.drift.DriftDetector fed the obs
+        # deltas between metrics_snapshot scrapes (the scrape cadence IS the
+        # detector's window — monitoring-driven, zero decision-path cost)
+        if drift_detector is not None and not base.telemetry:
+            raise ValueError("drift_detector requires cfg.telemetry=True "
+                             "(the detector consumes the telemetry rider's "
+                             "observable totals)")
+        self.drift = drift_detector
+        self._drift_prev_obs: Optional[dict] = None
         self._policy_info = {
             "kind": np.asarray(policy.kind).tolist(),
             "threshold": np.asarray(policy.threshold).tolist(),
@@ -593,6 +605,11 @@ class OnlineAdmissionEngine:
         decision-latency / flush-batch-size host histograms, and (with
         ``cfg.telemetry``) the device telemetry rider's summary.
 
+        With a ``drift_detector`` attached, each scrape additionally feeds
+        the detector one window of observable deltas (cumulative telemetry
+        obs now minus the previous scrape — so the scrape cadence defines
+        the detector window) and exports its state under ``"drift"``.
+
         Unlike ``metrics()`` this never closes the open window, never
         flushes, and never synchronizes with the pump: it holds the state
         lock only long enough to dispatch a ``jnp.copy`` of the telemetry
@@ -618,6 +635,17 @@ class OnlineAdmissionEngine:
         snap = {"engine": eng}
         if tel_copy is not None:
             snap["telemetry"] = telemetry_summary(tel_copy)
+            if self.drift is not None:
+                from ..tuning.drift import channels_from_obs
+
+                obs = snap["telemetry"]["obs"]
+                with self._state_lock:
+                    prev = self._drift_prev_obs
+                    delta = (obs if prev is None else
+                             {k: obs[k] - prev.get(k, 0.0) for k in obs})
+                    self._drift_prev_obs = dict(obs)
+                    self.drift.update(channels_from_obs(delta))
+                    snap["drift"] = self.drift.snapshot()
         return snap
 
 

@@ -27,10 +27,11 @@ Shipped routers:
     when the policy kind carries no curves (zeroth).
   * ``ThresholdCascadeRouter``— mirrors the paper's per-cluster policy: try
     clusters in index order and take the first whose admission condition
-    (``core.policies.decide`` on the current aggregates) would accept;
+    (``core.policies.decide`` on the running aggregates) would accept;
     arrivals no cluster would accept get the rejected-by-all sentinel.
-    Stateless within a step on purpose: the authoritative sequential
-    accounting still happens in the target cluster's ``admit_sequential``.
+    Routed candidates are folded into the chosen cluster's running
+    aggregates (the same fold ``admit_sequential`` applies), so routing
+    and the target cluster's admission agree arrival for arrival.
 """
 from __future__ import annotations
 
@@ -138,30 +139,49 @@ class PowerOfTwoRouter(Router):
 
 
 class ThresholdCascadeRouter(Router):
-    """First cluster (in index order) whose admission policy would accept.
+    """First cluster (in index order) whose admission policy would accept,
+    with routed candidates folded into the running per-cluster aggregates.
 
-    Evaluates ``core.policies.decide`` for every (cluster, arrival) pair on
-    the clusters' current maintained aggregates; an arrival is routed to the
-    lowest-index accepting cluster, and to the rejected-by-all sentinel
-    ``C`` when no cluster's condition holds. This mirrors the paper's
-    per-cluster policy applied fleet-wide: the dispatch layer never admits
-    anything the cluster policy wouldn't. Within-step interactions (an
-    earlier arrival filling the cluster) are resolved by the target
-    cluster's own ``admit_sequential``, which remains authoritative.
+    Arrivals are considered sequentially within the step; an arrival is
+    routed to the lowest-index cluster whose ``core.policies.decide``
+    accepts it on that cluster's *running* (agg_EL, agg_VL, util) state,
+    and its moment curves and request are folded into the chosen cluster
+    before the next arrival is scored — the exact fold
+    ``admit_sequential`` applies inside the target cluster. By induction,
+    every cascade-routed arrival is then accepted by its target cluster's
+    sequential admission (same ``decide``, same running state), so routing
+    and admission agree arrival for arrival; the earlier stateless variant
+    could route two same-step arrivals into a cluster with room for one.
+    Arrivals no cluster accepts get the rejected-by-all sentinel ``C``.
+    The target cluster's ``admit_sequential`` remains authoritative — the
+    fold here is a per-step shadow of it, never written back.
     """
 
     name = "cascade"
 
     def route(self, key: jax.Array, ctx: RouteContext) -> jax.Array:
-        would_accept = jax.vmap(                 # over clusters ->
-            lambda pol_c, el, vl, u: jax.vmap(   # over arrivals
-                lambda ce, cv, c0: decide(pol_c, el, vl, u,
-                                          MomentCurves(ce, cv), c0))(
-                ctx.cand.EL, ctx.cand.VL, ctx.c0))(
-            ctx.policy, ctx.agg_el, ctx.agg_vl, ctx.util)        # [C, A]
-        first = jnp.argmax(would_accept, axis=0).astype(jnp.int32)
-        return jnp.where(jnp.any(would_accept, axis=0), first,
-                         jnp.int32(ctx.n_clusters))
+        n_c = ctx.n_clusters
+        idx = jnp.arange(n_c)
+
+        def pick(carry, x):
+            el, vl, u = carry                  # [C, N], [C, N], [C]
+            ce, cv, c0, ok = x                 # [N], [N], scalar, bool
+            acc = jax.vmap(                    # over clusters
+                lambda pol_c, el_c, vl_c, u_c: decide(
+                    pol_c, el_c, vl_c, u_c, MomentCurves(ce, cv), c0))(
+                ctx.policy, el, vl, u)         # [C]
+            routed = jnp.any(acc) & ok
+            c = jnp.argmax(acc).astype(jnp.int32)
+            sel = (idx == c) & routed
+            el = el + jnp.where(sel[:, None], ce[None, :], 0.0)
+            vl = vl + jnp.where(sel[:, None], cv[None, :], 0.0)
+            u = u + jnp.where(sel, c0, 0.0)
+            return (el, vl, u), jnp.where(routed, c, jnp.int32(n_c))
+
+        _, assign = jax.lax.scan(
+            pick, (ctx.agg_el, ctx.agg_vl, ctx.util),
+            (ctx.cand.EL, ctx.cand.VL, ctx.c0, ctx.valid))
+        return assign
 
 
 #: name -> zero-arg factory, for benchmarks and CLI surfaces

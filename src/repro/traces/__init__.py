@@ -35,16 +35,20 @@ Scenario registry: ``synth.register_scenario(name)`` registers a
 ``fn(key, spec) -> WorkloadTrace`` recipe (à la ``models/registry.py``);
 ``scenario_names()`` / ``get_scenario(name)`` / ``synthesize_scenario``
 enumerate and invoke them. Shipped scenarios: ``baseline``, ``diurnal``,
-``flash_crowd``, ``heavy_tail``, ``batched`` — all runnable through
-``benchmarks/scenarios.py``.
+``flash_crowd``, ``heavy_tail``, ``batched``, plus the non-stationary-prior
+``drift_ramp``/``drift_step`` pair consumed by ``tuning/drift.py`` — all
+runnable through ``benchmarks/scenarios.py``.
 """
 from .schema import (ScaleoutEvents, WorkloadTrace, events_csv_path,
                      has_latents, load_csv, load_npz, n_deployments, save_csv,
                      save_npz, validate_trace)
-from .synth import (Scenario, TraceSpec, get_scenario, register_scenario,
+from .synth import (DRIFT_MU_SCALE, DRIFT_RAMP_FRACS, DRIFT_STEP_FRAC,
+                    Scenario, TraceSpec, drift_mu_ramp, drift_mu_step,
+                    drifted_priors, get_scenario, register_scenario,
                     scenario_names, synthesize_scenario, synthesize_trace)
-from .fit import (fit_gamma_mle, fit_gamma_moments, fit_priors,
-                  prior_relative_errors)
+from .fit import (NU_GRID, FitStats, fit_gamma_mle, fit_gamma_moments,
+                  fit_priors, merge_stats, prior_relative_errors,
+                  stats_to_priors, window_stats)
 from .replay import (PSEUDO_AUTO, PSEUDO_LATENT, PSEUDO_OBSERVED,
                      TraceArrivalSource, params_from_trace, trace_to_stream)
 from .ingest import (AZURE_2017_POSITIONAL, CortezSchema, ingest_cortez_csv,
@@ -54,10 +58,12 @@ __all__ = [
     "ScaleoutEvents", "WorkloadTrace", "events_csv_path", "has_latents",
     "load_csv", "load_npz", "n_deployments", "save_csv", "save_npz",
     "validate_trace",
-    "Scenario", "TraceSpec", "get_scenario", "register_scenario",
+    "DRIFT_MU_SCALE", "DRIFT_RAMP_FRACS", "DRIFT_STEP_FRAC",
+    "Scenario", "TraceSpec", "drift_mu_ramp", "drift_mu_step",
+    "drifted_priors", "get_scenario", "register_scenario",
     "scenario_names", "synthesize_scenario", "synthesize_trace",
-    "fit_gamma_mle", "fit_gamma_moments", "fit_priors",
-    "prior_relative_errors",
+    "NU_GRID", "FitStats", "fit_gamma_mle", "fit_gamma_moments", "fit_priors",
+    "merge_stats", "prior_relative_errors", "stats_to_priors", "window_stats",
     "PSEUDO_AUTO", "PSEUDO_LATENT", "PSEUDO_OBSERVED",
     "TraceArrivalSource", "params_from_trace", "trace_to_stream",
     "AZURE_2017_POSITIONAL", "CortezSchema", "ingest_cortez_csv",

@@ -28,9 +28,12 @@ deployments), following the paper's §2.1 generative model:
 
 Scenario modifiers compose on top: ``rate_profile`` (arrival-rate
 modulation), ``heavy_frac``/``heavy_mu_scale`` (heavy-tail lifetime
-inflation via a mu-mixture), and ``batch_size``/``batch_share_params``
+inflation via a mu-mixture), ``batch_size``/``batch_share_params``
 (correlated batch arrivals that share an arrival instant and, optionally,
-latent parameters). Named combinations are registered in ``_SCENARIOS``
+latent parameters), and ``param_drift`` (non-stationary priors: per-arrival
+multiplicative factors on the sampled latents as a function of arrival
+time — the drift scenarios ramp/step mu with it). Named combinations are
+registered in ``_SCENARIOS``
 (à la ``models/registry.py``): ``register_scenario`` / ``get_scenario`` /
 ``scenario_names`` / ``synthesize_scenario``.
 """
@@ -93,6 +96,7 @@ def synthesize_trace(
     heavy_mu_scale: float = 1.0,
     batch_size: int = 1,
     batch_share_params: bool = False,
+    param_drift: Optional[Callable[[jax.Array], DeploymentParams]] = None,
 ) -> WorkloadTrace:
     """One synthetic ``WorkloadTrace`` from the population priors.
 
@@ -103,7 +107,10 @@ def synthesize_trace(
     inflation for ``heavy_mu_scale < 1``). ``batch_size > 1`` snaps blocks of
     consecutive arrivals to their leader's arrival instant (correlated
     batches), sharing the leader's latent parameters when
-    ``batch_share_params``.
+    ``batch_share_params``. ``param_drift(t_arr)`` returns per-deployment
+    multiplicative factors (a ``DeploymentParams`` of multipliers) applied
+    to the sampled latents as a function of arrival time — the population
+    priors become piecewise/ramped in time, the drift setting.
     """
     priors = spec.priors
     d, e = spec.max_deployments, spec.max_events
@@ -151,6 +158,14 @@ def synthesize_trace(
         t_arr = t_arr[leader]
         if batch_share_params:
             params = jax.tree.map(lambda a: a[leader], params)
+    if param_drift is not None:
+        # factors are evaluated at the final (post-batch-snap) arrival times;
+        # invalid rows carry out-of-horizon sentinels but are masked out of
+        # every trace column below, so their factors are irrelevant
+        f = param_drift(jnp.minimum(t_arr, horizon))
+        params = DeploymentParams(lam=params.lam * f.lam,
+                                  mu=params.mu * f.mu,
+                                  sig=params.sig * f.sig)
     lam, mu, sig = params.lam, params.mu, params.sig
 
     c0 = (1.0 + fast_poisson(k_c0, sig)).astype(jnp.float32)
@@ -297,3 +312,65 @@ def _batched(key, spec):
     """Correlated batch arrivals: groups of 4 deployments submitted at the
     same instant with shared latent parameters."""
     return synthesize_trace(key, spec, batch_size=4, batch_share_params=True)
+
+
+# -- drifting (non-stationary-prior) scenarios ------------------------------
+#
+# Both drift scenarios modulate mu DOWNWARD (deployments live longer), the
+# dangerous direction: offered load grows, so a stationary-tuned operating
+# point silently slides past its SLA — the regime tuning/drift.py detects
+# and re-tunes out of. The terminal regime is itself a stationary prior
+# (mu scaled by the constant below), recoverable via ``drifted_priors``.
+
+#: terminal mu multiplier of the drift scenarios (lifetimes 1/scale longer)
+DRIFT_MU_SCALE = 0.4
+#: drift_ramp: mu ramps linearly between these horizon fractions
+DRIFT_RAMP_FRACS = (0.25, 0.55)
+#: drift_step: mu steps at this horizon fraction
+DRIFT_STEP_FRAC = 0.5
+
+
+def drift_mu_ramp(t: jax.Array, horizon_hours: float) -> jax.Array:
+    """The drift_ramp mu multiplier at time t: 1 → DRIFT_MU_SCALE linearly
+    over the DRIFT_RAMP_FRACS span, constant outside it."""
+    a, b = DRIFT_RAMP_FRACS
+    frac = jnp.clip((t / horizon_hours - a) / (b - a), 0.0, 1.0)
+    return 1.0 + (DRIFT_MU_SCALE - 1.0) * frac
+
+
+def drift_mu_step(t: jax.Array, horizon_hours: float) -> jax.Array:
+    """The drift_step mu multiplier at time t: 1 before the step fraction,
+    DRIFT_MU_SCALE after."""
+    return jnp.where(t >= DRIFT_STEP_FRAC * horizon_hours,
+                     DRIFT_MU_SCALE, 1.0)
+
+
+def drifted_priors(priors: PopulationPriors,
+                   mu_scale: float = DRIFT_MU_SCALE) -> PopulationPriors:
+    """The stationary priors of the fully-drifted regime: mu scaled by
+    ``mu_scale`` means Gamma(shape, rate / mu_scale)."""
+    return priors._replace(mu_rate=priors.mu_rate / mu_scale)
+
+
+def _mu_only(factor: jax.Array) -> DeploymentParams:
+    one = jnp.ones_like(factor)
+    return DeploymentParams(lam=one, mu=factor, sig=one)
+
+
+@register_scenario("drift_ramp")
+def _drift_ramp(key, spec):
+    """Slow multi-month prior drift: mu ramps down to DRIFT_MU_SCALE over
+    the middle of the horizon (deployments arriving later live ~2.5x
+    longer), holding the drifted regime thereafter."""
+    return synthesize_trace(
+        key, spec,
+        param_drift=lambda t: _mu_only(drift_mu_ramp(t, spec.horizon_hours)))
+
+
+@register_scenario("drift_step")
+def _drift_step(key, spec):
+    """Abrupt prior change: mu steps down to DRIFT_MU_SCALE at mid-horizon
+    — the detection-delay scenario."""
+    return synthesize_trace(
+        key, spec,
+        param_drift=lambda t: _mu_only(drift_mu_step(t, spec.horizon_hours)))

@@ -11,6 +11,11 @@ the ``agg_refresh`` K-curve (paper §5.2, as first-class testable code).
   * ``kcurve``     — utilization and SLA-slack vs ``agg_refresh_steps``,
     recorded into BENCH artifacts; ``pick_agg_refresh`` selects the
     per-scale refresh interval from the measured curve instead of by hand.
+  * ``drift``      — drift-aware streaming recalibration: censoring-robust
+    drift channels over the windowed sufficient statistics, a Monte-Carlo-
+    calibrated two-sided CUSUM detector (offline over replay windows and
+    live via the engine's telemetry), warm-started re-tuning around the
+    incumbent, and the never/triggered/oracle regret protocol.
 """
 from .calibrate import (SPACE_LINEAR, SPACE_LOG10, CalibrationResult,
                         ProbeStage, calibrate, eval_theta_grid, from_param,
@@ -21,6 +26,12 @@ from .kcurve import (DEFAULT_UTIL_TOL, KPoint, format_kcurve_derived,
                      kcurve_divisors, kcurve_row_name, load_kcurve,
                      parse_kcurve_rows, pick_agg_refresh, pick_from_curve,
                      sweep_kcurve)
+from .drift import (DRIFT_CHANNELS, DriftArm, DriftDetector, DriftNull,
+                    DriftProtocolResult, DriftReport, DriftUpdate,
+                    calibrate_drift_detector, channels_from_obs,
+                    channels_from_stats, detect_drift, retune_warm,
+                    run_drift_protocol, warm_theta_bounds,
+                    window_channel_values)
 
 __all__ = [
     "SPACE_LINEAR", "SPACE_LOG10", "CalibrationResult", "ProbeStage",
@@ -30,4 +41,9 @@ __all__ = [
     "DEFAULT_UTIL_TOL", "KPoint", "format_kcurve_derived", "kcurve_divisors",
     "kcurve_row_name", "load_kcurve", "parse_kcurve_rows", "pick_agg_refresh",
     "pick_from_curve", "sweep_kcurve",
+    "DRIFT_CHANNELS", "DriftArm", "DriftDetector", "DriftNull",
+    "DriftProtocolResult", "DriftReport", "DriftUpdate",
+    "calibrate_drift_detector", "channels_from_obs", "channels_from_stats",
+    "detect_drift", "retune_warm", "run_drift_protocol", "warm_theta_bounds",
+    "window_channel_values",
 ]

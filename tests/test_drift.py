@@ -1,0 +1,360 @@
+"""Drift-aware streaming recalibration (tuning.drift + traces.fit streaming).
+
+Covers the PR's hardening satellites: streaming-fit == batch-fit
+equivalence (bit-for-bit on one window; merge associativity and window-
+order invariance; merged windows == concatenated trace), the drift
+detector's calibrated false-alarm rate and step-change detection delay,
+the golden pin on ``pseudo_counts_from_observables``, empty-window
+warn-and-continue, and the engine's live ``metrics_snapshot()`` export.
+
+Compile/runtime budget: everything shares one trace spec; the module-scope
+``drift_null`` fixture pays the stationary Monte-Carlo calibration once and
+every detector test reuses it. The full never/triggered/oracle regret
+protocol is slow-marked (it spends ~80 simulations).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from repro.testing import given, settings, strategies as st
+
+from repro.core import SECOND, ZEROTH, geometric_grid, make_policy
+from repro.core.belief import pseudo_counts_from_observables
+from repro.sim import make_config
+from repro.traces import (DRIFT_MU_SCALE, FitStats, TraceSpec, drifted_priors,
+                          fit_priors, merge_stats, stats_to_priors,
+                          synthesize_scenario, window_stats)
+from repro.tuning import (DRIFT_CHANNELS, DriftDetector, DriftNull,
+                          calibrate_drift_detector, channels_from_obs,
+                          channels_from_stats, detect_drift, run_drift_protocol,
+                          theta_space, warm_theta_bounds,
+                          window_channel_values)
+
+#: one spec for the whole module: 12 windows of 20 days, enough arrivals per
+#: window (~70) for stable channel means at CPU-runnable synthesis cost
+SPEC = TraceSpec(horizon_hours=240 * 24.0, arrival_rate=0.12,
+                 max_deployments=2048, max_events=8)
+WINDOW = 20 * 24.0
+ONSET_W = 6            # drift_step flips at DRIFT_STEP_FRAC=0.5 -> window 6
+ALPHA = 0.1
+
+PRIOR_FIELDS = ("mu_shape", "mu_rate", "lam_shape", "lam_rate",
+                "sig_shape", "sig_rate", "delta", "nu")
+
+
+@pytest.fixture(scope="module")
+def base_trace():
+    return synthesize_scenario(jax.random.PRNGKey(3), "baseline", SPEC)
+
+
+@pytest.fixture(scope="module")
+def drift_null():
+    return calibrate_drift_detector(jax.random.PRNGKey(7), SPEC,
+                                    window_hours=WINDOW, n_reps=8,
+                                    alpha=ALPHA)
+
+
+def _split_stats(trace, edges):
+    return [window_stats(trace, a, b) for a, b in zip(edges[:-1], edges[1:])]
+
+
+def _assert_stats_close(a: FitStats, b: FitStats, rtol=1e-12):
+    for f in FitStats._fields:
+        if f in ("t0", "t1"):
+            continue
+        np.testing.assert_allclose(getattr(a, f), getattr(b, f), rtol=rtol,
+                                   atol=1e-12, err_msg=f)
+
+
+class TestStreamingFit:
+    """Satellite: sufficient-statistics layer == batch fit, exactly."""
+
+    def test_one_window_equals_batch_bitforbit(self, base_trace):
+        stats = window_stats(base_trace, 0.0, np.inf)
+        p_stream, d_stream = stats_to_priors(stats)
+        p_batch, d_batch = fit_priors(base_trace, source="observed")
+        for f in PRIOR_FIELDS:
+            assert getattr(p_stream, f) == getattr(p_batch, f), f
+        assert d_stream["n_deployments"] == d_batch["n_deployments"]
+
+    @settings(max_examples=6, deadline=None)
+    @given(n_windows=st.integers(2, 8), seed=st.integers(0, 1_000))
+    def test_merged_windows_equal_concatenated_trace(self, base_trace,
+                                                     n_windows, seed):
+        """Priors from merged disjoint windows == batch priors over the
+        whole trace (windows partition the deployments by arrival, so the
+        merge is exact up to float summation order)."""
+        rng = np.random.default_rng(seed)
+        horizon = float(SPEC.horizon_hours)
+        cuts = np.sort(rng.uniform(0.0, horizon, n_windows - 1))
+        edges = [0.0, *cuts.tolist(), np.inf]
+        merged = merge_stats(*_split_stats(base_trace, edges))
+        batch = window_stats(base_trace, 0.0, np.inf)
+        _assert_stats_close(merged, batch)
+        p_m, _ = stats_to_priors(merged)
+        p_b, _ = stats_to_priors(batch)
+        for f in PRIOR_FIELDS:
+            np.testing.assert_allclose(getattr(p_m, f), getattr(p_b, f),
+                                       rtol=1e-9, err_msg=f)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 1_000))
+    def test_merge_associative_and_order_invariant(self, base_trace, seed):
+        rng = np.random.default_rng(seed)
+        cuts = np.sort(rng.uniform(0.0, float(SPEC.horizon_hours), 3))
+        parts = _split_stats(base_trace, [0.0, *cuts.tolist(), np.inf])
+        a, b, c, d = parts
+        left = merge_stats(merge_stats(a, b), merge_stats(c, d))
+        right = merge_stats(a, merge_stats(b, merge_stats(c, d)))
+        _assert_stats_close(left, right)
+        perm = [parts[i] for i in rng.permutation(4)]
+        _assert_stats_close(merge_stats(*perm), left)
+
+    def test_merge_rejects_mismatched_min_deaths(self, base_trace):
+        a = window_stats(base_trace, 0.0, 1000.0, min_deaths=2)
+        b = window_stats(base_trace, 1000.0, np.inf, min_deaths=3)
+        with pytest.raises(ValueError, match="min_deaths"):
+            merge_stats(a, b)
+
+    def test_observables_keys_mirror_telemetry(self, base_trace):
+        from repro.obs.counters import WindowStats
+
+        obs = window_stats(base_trace, 0.0, np.inf).observables()
+        # every key the telemetry rider sums (except the slot-table-derived
+        # departures) appears under the same name
+        assert set(obs) == set(WindowStats._fields) - {"departed"}
+
+
+class TestEmptyWindows:
+    """Satellite: the observables path warns-and-continues on quiet data."""
+
+    def test_empty_window_warns_and_falls_back(self, base_trace):
+        stats = window_stats(base_trace, 1e9, 2e9)   # no arrivals out there
+        assert stats.n == 0.0
+        with pytest.warns(RuntimeWarning, match="informative samples"):
+            priors, diag = stats_to_priors(stats)
+        assert {"mu", "sig", "lam"} <= set(diag["degenerate"])
+        for f in PRIOR_FIELDS:
+            assert np.isfinite(getattr(priors, f)), f
+
+    def test_fit_priors_observed_all_invalid_warns_not_raises(self,
+                                                              base_trace):
+        dead = base_trace._replace(
+            valid=jnp.zeros_like(base_trace.valid))
+        with pytest.warns(RuntimeWarning):
+            priors, diag = fit_priors(dead, source="observed")
+        assert diag["n_deployments"] == 0
+        assert np.isfinite(priors.mu_shape)
+
+    def test_small_window_still_merges_into_batch(self, base_trace):
+        # an empty window is the additive identity: merging it changes
+        # nothing (the regression the property tests' edge generators found)
+        empty = window_stats(base_trace, 1e9, 2e9)
+        full = window_stats(base_trace, 0.0, np.inf)
+        _assert_stats_close(merge_stats(full, empty), full)
+
+
+class TestGoldenPseudoCounts:
+    """Satellite: pin the observed-fit path's conjugate-update inputs so the
+    sufficient-statistics refactor can't silently change them."""
+
+    def test_golden_values(self):
+        pc = pseudo_counts_from_observables(
+            core_deaths=jnp.asarray(3.0),
+            exposure_core_hours=jnp.asarray(120.5),
+            n_scaleouts=jnp.asarray(4.0),
+            scaleout_cores=jnp.asarray(10.0),
+            window_hours=jnp.asarray(48.0))
+        golden = {"n_lifetimes": 3.0, "sum_lifetimes": 120.5,
+                  "n_windows": 48.0, "n_scaleouts": 4.0, "n_sizes": 4.0,
+                  "sum_size_minus1": 6.0}
+        for k, want in golden.items():
+            assert float(getattr(pc, k)) == want, k
+
+    def test_malformed_rows_clip_to_no_information(self):
+        pc = pseudo_counts_from_observables(
+            core_deaths=jnp.asarray(-2.0),
+            exposure_core_hours=jnp.asarray(-1.0),
+            n_scaleouts=jnp.asarray(5.0),
+            scaleout_cores=jnp.asarray(2.0),   # fewer cores than events
+            window_hours=jnp.asarray(-3.0))
+        assert float(pc.n_lifetimes) == 0.0
+        assert float(pc.sum_lifetimes) == 0.0
+        assert float(pc.n_windows) == 0.0
+        assert float(pc.sum_size_minus1) == 0.0
+
+
+class TestDetector:
+    """Satellite: calibrated false-alarm rate and step-change delay."""
+
+    def test_false_alarm_rate_bounded(self, drift_null):
+        """Fired fraction on FRESH stationary replays <= nominal alpha plus
+        a 3-sigma binomial allowance (seeded, so deterministic)."""
+        n = 12
+        fired = 0
+        for s in range(100, 100 + n):
+            tr = synthesize_scenario(jax.random.PRNGKey(s), "baseline", SPEC)
+            fired += int(detect_drift(tr, drift_null,
+                                      window_hours=WINDOW).fired)
+        bound = ALPHA + 3.0 * np.sqrt(ALPHA * (1 - ALPHA) / n)
+        assert fired / n <= bound, (fired, n)
+
+    @pytest.mark.parametrize("seed", [3, 42])
+    def test_step_change_detected_with_bounded_delay(self, drift_null, seed):
+        tr = synthesize_scenario(jax.random.PRNGKey(seed), "drift_step", SPEC)
+        rep = detect_drift(tr, drift_null, window_hours=WINDOW)
+        assert rep.fired
+        assert ONSET_W <= rep.fired_window <= ONSET_W + 3, rep.fired_window
+        # the decision statistic is nondecreasing after the onset fires it
+        assert rep.stats[-1] >= rep.stats[rep.fired_window]
+
+    def test_ramp_detected(self, drift_null):
+        tr = synthesize_scenario(jax.random.PRNGKey(5), "drift_ramp", SPEC)
+        assert detect_drift(tr, drift_null, window_hours=WINDOW).fired
+
+    def test_null_absorbs_window_layout(self, drift_null):
+        assert np.isfinite(drift_null.threshold)
+        assert drift_null.threshold > 0
+        for c in DRIFT_CHANNELS:
+            assert drift_null.std[c] > 0
+        assert drift_null.n_windows == 12
+
+    def test_channels_flat_on_stationary_windows(self, base_trace):
+        """The censoring-robust channels do NOT trend across windows of a
+        stationary trace (the pooled death rate deaths/core-hours does —
+        that artifact is why the channels are per-deployment means)."""
+        vals = window_channel_values(base_trace, WINDOW)
+        mu = np.asarray([v["mu"] for v in vals])
+        assert np.isfinite(mu).all()
+        # last-quarter mean within 3x the across-window spread of the first
+        lo, hi = mu[:9].mean(), mu[9:].mean()
+        assert abs(hi - lo) <= 3.0 * mu[:9].std() + 1e-9
+
+    def test_nan_channels_hold_cusum(self):
+        null = DriftNull(mean={"mu": 1.0}, std={"mu": 0.5}, threshold=5.0,
+                         alpha=0.1, slack=0.5, n_reps=0, n_windows=0)
+        det = DriftDetector(null)
+        det.update({"mu": 2.0})
+        s = det.stat
+        upd = det.update({"mu": float("nan")})
+        assert upd.stat == s          # quiet window: statistic held
+        assert det.n_windows == 2
+
+    def test_detector_fires_and_latches(self):
+        null = DriftNull(mean={"mu": 0.0}, std={"mu": 1.0}, threshold=2.0,
+                         alpha=0.1, slack=0.5, n_reps=0, n_windows=0)
+        det = DriftDetector(null)
+        assert not det.update({"mu": 0.0}).fired
+        assert det.update({"mu": 4.0}).fired
+        assert det.fired_window == 1
+        upd = det.update({"mu": -10.0})
+        assert upd.fired and upd.fired_window == 1   # latched
+        det.reset()
+        assert det.stat == 0.0 and not det.fired
+
+
+class TestChannels:
+    def test_stats_and_obs_channels_share_keys(self, base_trace):
+        st_vals = channels_from_stats(window_stats(base_trace, 0.0, np.inf))
+        obs_vals = channels_from_obs(
+            window_stats(base_trace, 0.0, np.inf).observables())
+        assert set(st_vals) == set(obs_vals) == set(DRIFT_CHANNELS)
+
+    def test_obs_channels_arithmetic(self):
+        vals = channels_from_obs({"core_deaths": 6.0,
+                                  "exposure_core_hours": 300.0,
+                                  "n_scaleouts": 4.0, "alive_hours": 200.0,
+                                  "scaleout_cores": 14.0})
+        assert vals["mu"] == pytest.approx(0.02)
+        assert vals["scaleout"] == pytest.approx(0.02)
+        assert vals["size"] == pytest.approx(2.5)
+        quiet = channels_from_obs({})
+        assert all(np.isnan(v) for v in quiet.values())
+
+
+class TestWarmRetune:
+    @pytest.mark.parametrize("kind", [ZEROTH, SECOND])
+    def test_warm_bounds_contain_incumbent_and_shrink(self, kind):
+        capacity = 500.0
+        x_lo, x_hi, space = theta_space(kind, capacity)
+        theta0 = 0.1 if kind == SECOND else 0.6 * capacity
+        lo, hi = warm_theta_bounds(kind, theta0, capacity, frac=0.25)
+        assert x_lo <= lo < hi <= x_hi
+        assert hi - lo < 0.75 * (x_hi - x_lo)
+        from repro.tuning import from_param
+
+        assert lo <= from_param(theta0, space) <= hi
+
+    def test_warm_bounds_clip_at_cold_edges(self):
+        capacity = 500.0
+        x_lo, _, _ = theta_space(SECOND, capacity)
+        lo, _ = warm_theta_bounds(SECOND, 10 ** x_lo, capacity, frac=0.25)
+        assert lo == x_lo
+
+
+class TestEngineExport:
+    """Tentpole: the detector surfaces live via metrics_snapshot()."""
+
+    def test_snapshot_exports_drift_and_requires_telemetry(self):
+        from repro.serve import OnlineAdmissionEngine
+        from repro.serve.admission import Arrival
+
+        cfg = make_config(capacity=300.0, arrival_rate=0.1,
+                          horizon_hours=6 * 24.0, dt=24.0, max_slots=64,
+                          max_arrivals=4, telemetry=True)
+        grid = geometric_grid(cfg.dt, cfg.horizon_hours * 3, 12)
+        null = DriftNull(
+            mean={"mu": 0.004, "scaleout": 0.02, "size": 4.0},
+            std={"mu": 0.002, "scaleout": 0.01, "size": 1.0},
+            threshold=50.0, alpha=0.1, slack=0.5, n_reps=0, n_windows=0)
+        pol = make_policy(SECOND, rho=0.3, capacity=cfg.capacity)
+        eng = OnlineAdmissionEngine(cfg, grid, SECOND, pol,
+                                    drift_detector=DriftDetector(null))
+        key = jax.random.PRNGKey(0)
+        for _ in range(3):
+            key, k1, k2 = jax.random.split(key, 3)
+            eng.tick(k1)
+            eng.submit(Arrival.draw(k2, cfg))
+            eng.flush()
+            snap = eng.metrics_snapshot()
+        drift = snap["drift"]
+        assert drift["n_windows"] == 3       # one window per scrape
+        assert drift["threshold"] == 50.0
+        assert set(drift["channel_stats"]) == set(DRIFT_CHANNELS)
+        assert np.isfinite(drift["stat"])
+
+        with pytest.raises(ValueError, match="telemetry"):
+            OnlineAdmissionEngine(cfg._replace(telemetry=False), grid,
+                                  SECOND, pol,
+                                  drift_detector=DriftDetector(null))
+
+
+class TestDriftProtocol:
+    """Tentpole acceptance: triggered warm re-tuning beats never re-tuning
+    on the drifting scenario and lands within CI of the oracle."""
+
+    @pytest.mark.slow
+    def test_regret_ordering_and_oracle_ci(self):
+        cfg = make_config(capacity=800.0, arrival_rate=0.05,
+                          horizon_hours=60 * 24.0, dt=24.0, max_slots=128,
+                          max_arrivals=5, agg_refresh_steps=1)
+        grid = geometric_grid(cfg.dt, cfg.horizon_hours * 3.0, 16)
+        res = run_drift_protocol(
+            jax.random.PRNGKey(0), kind=SECOND, cfg=cfg, grid=grid,
+            spec=SPEC, tau=5e-3, window_hours=WINDOW, n_runs=4, n_grid=5,
+            n_null_reps=6)
+        assert res.report.fired
+        assert res.delay_windows >= 0
+        assert 0.0 <= res.delay_frac <= 1.0
+        # the drifted regime really is drifted (mu slowed by the scale)
+        drifted = drifted_priors(cfg.priors, DRIFT_MU_SCALE)
+        assert drifted.mu_rate == pytest.approx(
+            cfg.priors.mu_rate / DRIFT_MU_SCALE)
+        # acceptance: regret(triggered) <= regret(never), within oracle CI
+        assert res.triggered.regret <= res.never.regret + 1e-9
+        assert res.within_ci
+        # the warm re-tune spends fewer simulations than the cold oracle
+        assert res.triggered.n_sims <= res.oracle.n_sims
+        assert dataclasses.asdict(res.never)["name"] == "never"

@@ -121,6 +121,53 @@ class TestRouters:
         # c0=40: exceeds both thresholds -> rejected-by-all sentinel 2
         np.testing.assert_array_equal(assign, [1, 2])
 
+    def test_cascade_folds_same_step_arrivals(self):
+        pol = fleet_policy(ZEROTH, capacities=[100.0, 100.0],
+                           threshold=60.0)  # per-cluster thresholds 30/30
+        ctx = _ctx(jnp.zeros((2, 2)), [0.0, 0.0], [100.0, 100.0], pol,
+                   c0=[20.0, 20.0, 20.0], valid=[True] * 3)
+        assign = np.asarray(
+            ThresholdCascadeRouter().route(jax.random.PRNGKey(0), ctx))
+        # the fold makes the 2nd arrival see cluster 0 at 20 cores
+        # (20+20 > 30 -> cascade to 1) and the 3rd see both at 20 ->
+        # sentinel; the stateless router would have sent all three to 0
+        np.testing.assert_array_equal(assign, [0, 1, 2])
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 1_000_000))
+    def test_cascade_routed_implies_admit_sequential_accepts(self, seed):
+        """PR 5 carry-over: with the fold, a cascade-routed arrival is
+        accepted by its target cluster's ``admit_sequential`` run on the
+        same pre-step aggregates — routing and admission agree exactly."""
+        from repro.core.policies import admit_sequential
+
+        k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+        n_c, n_a, n_n = 3, 6, 5
+        caps = [60.0, 50.0, 40.0]
+        pol = fleet_policy(SECOND, capacities=caps, rho=0.3)
+        cand = MomentCurves(
+            EL=jax.random.uniform(k1, (n_a, n_n), maxval=25.0),
+            VL=jax.random.uniform(k2, (n_a, n_n), maxval=40.0))
+        agg_el = jax.random.uniform(k3, (n_c, n_n), maxval=30.0)
+        valid = np.ones(n_a, bool)
+        valid[-1] = False
+        ctx = RouteContext(
+            cand=cand, c0=jax.random.uniform(k4, (n_a,), minval=1.0,
+                                             maxval=10.0),
+            valid=jnp.asarray(valid), agg_el=agg_el, agg_vl=agg_el * 0.5,
+            util=jnp.asarray([10.0, 5.0, 0.0]),
+            capacities=jnp.asarray(caps, jnp.float32), policy=pol)
+        assign = np.asarray(
+            ThresholdCascadeRouter().route(jax.random.PRNGKey(0), ctx))
+        assert ((assign >= 0) & (assign <= n_c)).all()
+        for c in range(n_c):
+            mask = jnp.asarray((assign == c) & valid)
+            pol_c = jax.tree.map(lambda x: x[c], pol)
+            res = admit_sequential(pol_c, ctx.agg_el[c], ctx.agg_vl[c],
+                                   ctx.util[c], cand, ctx.c0, mask)
+            np.testing.assert_array_equal(np.asarray(res.accept),
+                                          np.asarray(mask))
+
 
 class TestOneClusterEquivalence:
     def test_fleet_of_one_reproduces_single_cluster(self, single_zeroth,
