@@ -15,6 +15,15 @@ i.e. admission without the incrementally-maintained aggregate):
   * ``serve/<scale>/engine|naive/slots=...`` — the same measurement at a
     quarter of the preset's slot table: the naive path's per-decision cost
     scales with cluster state size, the micro-batched path's does not.
+  * ``serve/<scale>/sharded`` — the same engine with the slot table sharded
+    over 8 virtual devices (``shards=8``, run in a subprocess under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``); decisions are
+    bit-for-bit the unsharded engine's, so this row measures pure sharding
+    overhead at one-device scale (the win is capacity, not speed, on CPU).
+  * ``serve/<scale>/deadline_flush`` — the SLO-aware flush scheduler under
+    nominal (paced, sub-width) load: recorded p50/p99 submit→decision
+    latency from the engine's own histogram, which must meet the configured
+    SLO with zero deadline-miss counter increments.
   * ``serve/<scale>/operating_point/<kind>`` — the tuned (theta, capacity,
     tau) operating point re-published from the artifact's own
     ``tuning/calibrate/<kind>`` rows; these rows are what
@@ -89,12 +98,13 @@ def _offered_stream(cfg, width: int, n_slices: int, seed: int):
 
 
 def _measure(cfg, grid, pol, *, naive: bool, width: int, n_ticks: int,
-             per_tick: int, seed: int) -> dict:
+             per_tick: int, seed: int, shards: int = 1) -> dict:
     """Drive the engine ``n_ticks`` windows at ``per_tick`` offered arrivals
     each; time every decision call (micro-batch of ``width``, or width-1 on
     the naive path). Returns decisions/sec, latency quantiles, occupancy."""
     eng = OnlineAdmissionEngine(cfg, grid, SECOND, pol, naive=naive,
-                                micro_batch=width)
+                                micro_batch=width,
+                                shards=shards if shards > 1 else None)
     bw = 1 if naive else width
     batches_per_tick = max(per_tick // bw, 1)
     slices = _offered_stream(cfg, bw, (n_ticks + 1) * batches_per_tick, seed)
@@ -165,6 +175,93 @@ def _measure_telemetry_pair(cfg, grid, pol, *, width: int, n_ticks: int,
     return tuple(float(np.median(lat[i]) * 1e6 / width) for i in (0, 1))
 
 
+def _sharded_entry(scale_name: str, seed: int, width: int, n_ticks: int,
+                   per_tick: int, shards: int) -> dict:
+    """Subprocess body for the sharded row: rebuild the preset's config and
+    run ``_measure`` with the slot table sharded over ``shards`` devices.
+    Must run under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (the parent drives it via ``_measure_sharded``)."""
+    scale = _scale_for(scale_name)
+    cfg = sim_config(scale)
+    grid = grid_for(scale, cfg)
+    rho = _calibrated_thetas(scale.name).get("second", FALLBACK_RHO)
+    pol = make_policy(SECOND, rho=rho, capacity=cfg.capacity)
+    return _measure(cfg, grid, pol, naive=False, width=width,
+                    n_ticks=n_ticks, per_tick=per_tick, seed=seed,
+                    shards=shards)
+
+
+def _measure_sharded(scale_name: str, *, seed: int, width: int, n_ticks: int,
+                     per_tick: int, shards: int = 8) -> dict:
+    """Run ``_sharded_entry`` in a subprocess with ``shards`` virtual CPU
+    devices (the parent process already initialized jax with one device, so
+    the device count cannot be changed in-process)."""
+    import subprocess
+    import sys
+
+    repo_root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={shards}")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [repo_root, os.path.join(repo_root, "src"),
+         env.get("PYTHONPATH", "")])
+    code = ("import json, sys\n"
+            "from benchmarks.serve_bench import _sharded_entry\n"
+            "a = json.loads(sys.argv[1])\n"
+            "print(json.dumps(_sharded_entry(**a)))\n")
+    args = dict(scale_name=scale_name, seed=seed, width=width,
+                n_ticks=n_ticks, per_tick=per_tick, shards=shards)
+    out = subprocess.run([sys.executable, "-c", code, json.dumps(args)],
+                         env=env, capture_output=True, text=True,
+                         timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(f"sharded bench subprocess failed:\n{out.stderr}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _measure_deadline(cfg, grid, pol, *, width: int, slo_ms: float,
+                      n_requests: int, seed: int) -> dict:
+    """Drive the deadline scheduler at nominal load: paced sub-width
+    ``submit()``s (so the deadline trigger — not the width trigger — fires)
+    and the engine's own recorded submit→decision latency histogram as the
+    measurement. Misses are the engine's counter, not a recomputation."""
+    from repro.serve import Arrival
+
+    eng = OnlineAdmissionEngine(cfg, grid, SECOND, pol, micro_batch=width,
+                                flush_slo_ms=slo_ms)
+    stream_cfg = cfg._replace(max_arrivals=1,
+                              horizon_hours=(n_requests + 1) * cfg.dt,
+                              arrival_rate=10.0 / cfg.dt,
+                              agg_refresh_steps=1)
+    stream = draw_arrival_stream(jax.random.PRNGKey(seed + 7), stream_cfg)
+    arrivals = [Arrival.from_stream(stream, t, 0)
+                for t in range(n_requests + 1)]
+    eng.tick(jax.random.PRNGKey(seed))
+    # compile the decide path outside the recorded region (decide_slice via
+    # _decide does not touch the latency histogram or the miss counter)
+    eng._decide([arrivals[0]])
+    pace_s = (slo_ms / 1e3) / (2.0 * width)   # nominal: sub-width per SLO
+    eng.start()
+    futs = []
+    for a in arrivals[1:]:
+        futs.append(eng.submit(a))
+        time.sleep(pace_s)
+    for f in futs:
+        f.result(timeout=60)
+    eng.stop()
+    snap = eng.metrics_snapshot()["engine"]
+    hist = snap["decision_latency_seconds"]
+    return {
+        "p50_ms": hist.percentile(0.5) * 1e3,
+        "p99_ms": hist.percentile(0.99) * 1e3,
+        "mean_us": hist.sum / max(hist.total, 1) * 1e6,
+        "misses": int(snap["deadline_misses"]),
+        "n_flushes": int(snap["n_flushes"]),
+        "n_decisions": int(hist.total),
+    }
+
+
 def _derived(m: dict, width: int, slots: int) -> str:
     return (f"decisions_per_s={m['decisions_per_s']:.0f}"
             f" p50_ms={m['p50_ms']:.3f} p99_ms={m['p99_ms']:.3f}"
@@ -230,6 +327,24 @@ def run(scale_name: str = "tiny", seed: int = 0) -> list:
             f"serve/{scale.name}/{tag}/slots={small.max_slots}",
             m["us_per_decision"],
             _derived(m, 1 if naive else width, small.max_slots)))
+
+    # -- device-sharded slot table (8 virtual devices, subprocess) ----------
+    m_sh = _measure_sharded(scale.name, seed=seed, width=width,
+                            n_ticks=n_ticks, per_tick=per_tick, shards=8)
+    rows.append(csv_row(
+        f"serve/{scale.name}/sharded", m_sh["us_per_decision"],
+        _derived(m_sh, width, cfg.max_slots) + " shards=8"))
+
+    # -- deadline-aware flush scheduler at nominal load ---------------------
+    slo_ms = 200.0 if smoke else 250.0
+    m_dl = _measure_deadline(cfg, grid, pol, width=width, slo_ms=slo_ms,
+                             n_requests=6 * width, seed=seed)
+    rows.append(csv_row(
+        f"serve/{scale.name}/deadline_flush", m_dl["mean_us"],
+        f"p50_ms={m_dl['p50_ms']:.3f} p99_ms={m_dl['p99_ms']:.3f}"
+        f" slo_ms={slo_ms:.0f} misses={m_dl['misses']}"
+        f" n_flushes={m_dl['n_flushes']} n={m_dl['n_decisions']}"
+        f" target_misses=0"))
 
     # -- tuned operating points for the daemon ------------------------------
     for kind_name, theta in sorted(thetas.items()):

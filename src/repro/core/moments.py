@@ -437,6 +437,59 @@ def aggregate_moment_curves(
     return MomentCurves(EL=el, VL=vl)
 
 
+def masked_curve_reduction(curves: MomentCurves, mask: jax.Array,
+                           block_size: int = 512) -> MomentCurves:
+    """Reduce already-evaluated per-slot curves ``[S, N]`` to the masked
+    cluster aggregate ``[N]`` with the **exact reduction structure** of
+    ``aggregate_moment_curves``: one einsum up to ``block_size`` slots, a
+    left-fold of per-``block_size``-block einsums beyond.
+
+    This exists for callers that evaluate the per-slot curves elsewhere —
+    the device-sharded admission core evaluates each shard's curves locally,
+    all-gathers them, and reduces here — and must still reproduce the fused
+    aggregate bit-for-bit: floating-point sums are order-sensitive, so only
+    the same block split and the same left-fold over blocks gives the same
+    result as the unsharded path. Keep this in lockstep with
+    ``aggregate_moment_curves`` (equivalence is pinned in
+    ``tests/test_aggregate_fastpath.py``).
+    """
+    s = mask.shape[-1]
+    if s <= block_size:
+        return MomentCurves(
+            EL=jnp.einsum("...sn,...s->...n", curves.EL, mask),
+            VL=jnp.einsum("...sn,...s->...n", curves.VL, mask))
+
+    pad = (-s) % block_size
+    if pad:
+        # filler slots contribute 0 * finite = 0, exactly as the fused
+        # path's mask-zeroed benign filler slots do
+        curves = jax.tree.map(
+            lambda x: jnp.concatenate(
+                [x, jnp.zeros(x.shape[:-2] + (pad, x.shape[-1]), x.dtype)],
+                axis=-2),
+            curves)
+        mask = jnp.concatenate(
+            [mask, jnp.zeros(mask.shape[:-1] + (pad,), mask.dtype)], axis=-1)
+    n_blocks = (s + pad) // block_size
+    n = curves.EL.shape[-1]
+    to_blocks_c = lambda x: jnp.moveaxis(
+        x.reshape(x.shape[:-2] + (n_blocks, block_size, n)), -3, 0)
+    blocks = jax.tree.map(to_blocks_c, curves)
+    mask_b = jnp.moveaxis(
+        mask.reshape(mask.shape[:-1] + (n_blocks, block_size)), -2, 0)
+    zero = jnp.zeros(mask.shape[:-1] + (n,), curves.EL.dtype)
+
+    def body(carry, xs):
+        el_acc, vl_acc = carry
+        cur, mk = xs
+        el_acc = el_acc + jnp.einsum("...sn,...s->...n", cur.EL, mk)
+        vl_acc = vl_acc + jnp.einsum("...sn,...s->...n", cur.VL, mk)
+        return (el_acc, vl_acc), None
+
+    (el, vl), _ = jax.lax.scan(body, (zero, zero), (blocks, mask_b))
+    return MomentCurves(EL=el, VL=vl)
+
+
 def moment_curves_discrete(
     bel: GammaBelief,
     cores: jax.Array,

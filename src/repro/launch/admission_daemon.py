@@ -22,11 +22,18 @@ ephemeral port and logs it). SIGTERM/SIGINT shut down gracefully: the serve
 loop stops at the next tick boundary, pending futures are flushed, and the
 final metrics snapshot is logged before exit 0.
 
+Scaling: ``--shards N`` shards the slot table over N devices (one engine,
+bit-for-bit the single-device decisions — see ``sim.core.slot_mesh``);
+``--flush-slo-ms L`` switches from per-tick caller-driven flushing to the
+engine's deadline scheduler, which fires partial micro-batches before any
+pending request exceeds its L-millisecond decision SLO (misses surface as
+``repro_admission_deadline_misses_total`` on ``/metrics``).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.admission_daemon --hours 2000 \
       --capacity 4096 [--policy second|first|zeroth] [--fleet 2048,2048] \
       [--param RHO_OR_THRESHOLD] [--micro-batch 8] [--metrics-port 9109] \
-      [--throttle 0.05]
+      [--throttle 0.05] [--shards 8] [--flush-slo-ms 50]
 """
 from __future__ import annotations
 
@@ -91,7 +98,11 @@ def build_engine(args):
 
     engine = OnlineAdmissionEngine(cfg, grid, kind, pol,
                                    micro_batch=args.micro_batch,
-                                   scale=args.scale)
+                                   scale=args.scale,
+                                   shards=getattr(args, "shards", None),
+                                   flush_slo_ms=getattr(args, "flush_slo_ms",
+                                                        None),
+                                   seed=args.seed)
     key = jax.random.PRNGKey(args.seed)
     k_stream, k_scan = jax.random.split(key)
     stream = draw_arrival_stream(k_stream, stream_config(cfg))
@@ -109,9 +120,17 @@ def serve_loop(engine, stream, keys, *, log_every: int = 0,
     ``stop`` (checked at each tick boundary) ends the loop early — the
     graceful-shutdown path; pending futures are still flushed and resolved.
     ``throttle_s`` sleeps between ticks so a scraper can watch ``/metrics``
-    evolve (CI uses this to curl a live daemon)."""
+    evolve (CI uses this to curl a live daemon).
+
+    With a flush SLO configured on the engine, the deadline scheduler owns
+    flushing: the loop only submits and awaits futures (resolved by the
+    scheduler thread within the SLO); otherwise it drives the legacy
+    caller-flushed protocol, one full flush per tick."""
     from ..serve import Arrival
 
+    slo_mode = getattr(engine, "flush_slo_s", None) is not None
+    if slo_mode:
+        engine.start()
     n_steps = keys.shape[0]
     max_a = int(np.asarray(stream.c0.shape[1]))
     n_arr = np.asarray(stream.n_arrivals)
@@ -126,7 +145,8 @@ def serve_loop(engine, stream, keys, *, log_every: int = 0,
         ticks += 1
         futs = [engine.submit(Arrival.from_stream(stream, t, a))
                 for a in range(min(int(n_arr[t]), max_a))]
-        engine.flush()
+        if not slo_mode:
+            engine.flush()
         admitted += sum(f.result() for f in futs)
         if log_every and (t + 1) % log_every == 0:
             m = engine.metrics()
@@ -134,7 +154,10 @@ def serve_loop(engine, stream, keys, *, log_every: int = 0,
                      float(m.utilization), admitted, engine.decisions)
         if throttle_s > 0.0:
             time.sleep(throttle_s)
-    engine.flush()  # resolve anything a racing submitter queued
+    if slo_mode:
+        engine.stop()      # joins the scheduler; final drain inside
+    else:
+        engine.flush()     # resolve anything a racing submitter queued
     return {"admitted": admitted, "decisions": engine.decisions,
             "ticks": ticks, "seconds": time.time() - t0}
 
@@ -188,15 +211,23 @@ def main():
     ap.add_argument("--throttle", type=float, default=0.0, metavar="SECONDS",
                     help="sleep between ticks so /metrics can be watched "
                          "while the daemon runs")
+    ap.add_argument("--shards", type=int, default=None, metavar="N",
+                    help="shard the slot table over N devices (single "
+                         "cluster only; decisions stay bit-for-bit equal "
+                         "to the unsharded engine)")
+    ap.add_argument("--flush-slo-ms", type=float, default=None, metavar="MS",
+                    help="decision-latency SLO: run the deadline-aware "
+                         "flush scheduler instead of per-tick flushing")
     args = ap.parse_args()
     set_level("INFO")  # the daemon is a CLI: its operational log is output
 
     engine, stream, keys, param = build_engine(args)
     mode = f"fleet[{args.fleet}]" if args.fleet else "single"
     log.info("policy=%s param=%g capacity=%.0f chips %s micro_batch=%d "
-             "agg_refresh_K=%d telemetry=%s", args.policy, param,
-             args.capacity, mode, engine.width, engine.k_refresh,
-             engine.base.telemetry)
+             "agg_refresh_K=%d telemetry=%s shards=%d flush_slo_ms=%s",
+             args.policy, param, args.capacity, mode, engine.width,
+             engine.k_refresh, engine.base.telemetry, engine.n_shards,
+             args.flush_slo_ms)
     rng = np.random.default_rng(args.seed)
     arch_mix = rng.choice(len(ARCH_NAMES), size=8)
     log.info("sample of admitted job types: %s",

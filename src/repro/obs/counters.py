@@ -26,6 +26,13 @@ count — twenty donated scalar buffers per decision measurably blew the
 overhead budget; four leaves are free. The ``I_*`` index constants name the
 slots, and property accessors keep host-side reads readable.
 
+Device-sharded engines (``sim.core.slot_mesh``) keep the rider *replicated*
+across slot shards: every fold consumes slot-reduced scalars that the
+``shard_map`` lane computes from the gathered full slot table, so each shard
+holds the identical totals and ``telemetry_summary`` reads any one replica —
+no cross-shard reduction at export time (asserted bit-for-bit against the
+unsharded rider in ``tests/test_online_admission.py``).
+
 Contents (fleet runs vmap the whole rider over the cluster axis, so every
 field below is *per cluster* there — ``n_routed`` across clusters is the
 routing count vector):

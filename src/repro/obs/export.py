@@ -172,10 +172,18 @@ def snapshot_to_prometheus(snap: dict) -> str:
     counter("refreshes_total", "Full aggregate refreshes",
             eng.get("n_refreshes", 0))
     counter("ticks_total", "Engine dt-window ticks", eng.get("n_ticks", 0))
+    counter("deadline_misses_total",
+            "Decisions whose submit->decision latency exceeded the flush SLO",
+            eng.get("deadline_misses", 0))
     gauge("queue_depth", "Pending requests in the micro-batch queue",
           [({}, eng.get("queue_depth", 0))])
     gauge("pump_idle_fraction", "Fraction of pump loop time spent idle",
           [({}, eng.get("pump_idle_fraction", 0.0))])
+    gauge("shard_count", "Devices the slot table is sharded over",
+          [({}, eng.get("n_shards", 1))])
+    gauge("flush_slo_seconds",
+          "Configured decision-latency SLO (0 = caller-driven flushing)",
+          [({}, eng.get("flush_slo_ms", 0.0) / 1e3)])
     for hname, help_ in (("decision_latency_seconds",
                           "submit->decision latency"),
                          ("flush_batch_size", "Decisions per flush")):

@@ -54,7 +54,7 @@ from ..obs.counters import WindowStats, fold_window, telemetry_summary
 from ..obs.export import HostHistogram, log_buckets
 from ..obs.tracing import DecisionTracer, annotate
 from ..sim.core import (ArrivalStream, CoreState, FleetConfig, SimConfig,
-                        StepOutcome, make_admission_core)
+                        StepOutcome, make_admission_core, slot_mesh)
 from ..sim.simulator import (_accumulate_step, _cluster_step_keys,
                              _fleet_metrics, _run_metrics, broadcast_policy)
 
@@ -136,6 +136,25 @@ class OnlineAdmissionEngine:
     front-end: one full aggregate recompute + width-1 decision per request
     (what admission costs without the maintained incremental aggregate).
 
+    Scaling and latency knobs:
+
+      * ``shards=N`` shards the slot table over N devices via the
+        ``sim.core.slot_mesh`` lane (single-cluster engines only): every
+        jitted step runs as a ``shard_map`` with per-shard moment-curve
+        evaluation and the unsharded path's exact reduction order, so the
+        sharded engine's decisions and metrics are **bit-for-bit** equal to
+        the unsharded engine's — one engine scales state with device count
+        instead of being capped by one device's ``max_slots``.
+      * ``flush_slo_ms=L`` replaces caller-driven flushing with the
+        deadline scheduler (see ``start``/``_deadline_loop``): partial
+        micro-batches fire when the oldest pending request approaches its
+        L-millisecond decision SLO, full batches when ``micro_batch``
+        requests are queued. Misses are counted in
+        ``metrics_snapshot()["engine"]["deadline_misses"]``.
+      * ``seed`` roots the engine's key chain: the observed-events tick
+        path derives its per-window key by ``fold_in(PRNGKey(seed), tick)``
+        so distinct engines/restarts draw decorrelated belief noise.
+
     Observability: with ``cfg.telemetry`` the ``CoreState`` carries the
     device telemetry rider through every step, and ``metrics_snapshot()``
     exports it (plus host-side decision-latency / flush-batch-size
@@ -152,7 +171,8 @@ class OnlineAdmissionEngine:
                  router=None, micro_batch: Optional[int] = None,
                  naive: bool = False, scale: Optional[str] = None,
                  tracer: Optional[DecisionTracer] = None,
-                 drift_detector=None):
+                 drift_detector=None, shards: Optional[int] = None,
+                 flush_slo_ms: Optional[float] = None, seed: int = 0):
         self.fleet = isinstance(cfg, FleetConfig)
         base = cfg.base if self.fleet else cfg
         if scale is not None:
@@ -163,8 +183,22 @@ class OnlineAdmissionEngine:
         self.cfg = FleetConfig(base=base, capacities=cfg.capacities) \
             if self.fleet else base
         self.base = base
-        self.core = make_admission_core(base, grid, policy_kind)
+        self.n_shards = int(shards or 1)
+        if self.n_shards > 1 and self.fleet:
+            raise ValueError(
+                "shards= shards one cluster's slot table over devices; "
+                "fleet engines already spread state over the cluster axis "
+                "— run one sharded engine per cluster instead")
+        mesh = slot_mesh(self.n_shards) if self.n_shards > 1 else None
+        self.core = make_admission_core(base, grid, policy_kind, mesh=mesh)
         self.k_refresh = base.agg_refresh_steps
+        if flush_slo_ms is not None and flush_slo_ms <= 0:
+            raise ValueError("flush_slo_ms must be positive")
+        self.flush_slo_s = (None if flush_slo_ms is None
+                            else float(flush_slo_ms) / 1e3)
+        self.deadline_misses = 0
+        self._flush_cost_s = 0.0    # EWMA of observed flush wall time
+        self._base_key = jax.random.PRNGKey(seed)
         self.naive = naive
         self.width = int(micro_batch or base.max_arrivals)
         self.n_c = self.cfg.n_clusters if self.fleet else 1
@@ -198,6 +232,7 @@ class OnlineAdmissionEngine:
         # -- micro-batch front-end ------------------------------------------
         self._pending: list = []                  # [(Arrival, Future, t_sub)]
         self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
         self._pump: Optional[threading.Thread] = None
         self._stop = threading.Event()
 
@@ -207,7 +242,16 @@ class OnlineAdmissionEngine:
         # a snapshot racing the pump could read already-donated buffers
         self._state_lock = threading.RLock()
         self.tracer = tracer
-        self._hist_latency = HostHistogram()      # submit->decision, seconds
+        if self.flush_slo_s is not None:
+            # SLO-anchored buckets: the SLO itself is a bucket edge, so the
+            # interpolated p99 certifies SLO attainment (p99 <= SLO exactly
+            # when no observation crossed the SLO edge) instead of smearing
+            # sub-SLO latencies into a coarse decade-wide default bucket
+            slo = self.flush_slo_s
+            self._hist_latency = HostHistogram(
+                log_buckets(slo / 512.0, slo, 10) + (2.0 * slo, 4.0 * slo))
+        else:
+            self._hist_latency = HostHistogram()  # submit->decision, seconds
         self._hist_batch = HostHistogram(
             log_buckets(1.0, float(max(self.width, 2)), 8))
         self.n_flushes = 0
@@ -401,7 +445,12 @@ class OnlineAdmissionEngine:
                     ev = jax.tree.map(jnp.asarray, events)
                     self._cs, self._out = self._j_ingest(self._caps,
                                                          self._cs, ev)
-                    self._step_key = jax.random.PRNGKey(self.ticks)
+                    # derive from the engine's seed chain: PRNGKey(self.ticks)
+                    # here would be identical across engines, fleet clusters,
+                    # and restarts, perfectly correlating any downstream
+                    # belief noise
+                    self._step_key = jax.random.fold_in(self._base_key,
+                                                        self.ticks)
                 else:
                     self._cs, self._out = self._j_tick(key, self._cs)
                     self._step_key = key
@@ -420,6 +469,9 @@ class OnlineAdmissionEngine:
             self._util_trace.append(util_end)
             self._fail_trace.append(self._out.failed)
             self._out = None
+            # zero the folded window counters so a second close (metrics()
+            # followed by tick()) cannot double-count them
+            self._acc = self._rej = 0.0
 
     # ------------------------------------------------- micro-batch frontend
 
@@ -430,6 +482,7 @@ class OnlineAdmissionEngine:
         fut: Future = Future()
         with self._lock:
             self._pending.append((arrival, fut, time.monotonic()))
+            self._work.notify()
         return fut
 
     @property
@@ -440,22 +493,40 @@ class OnlineAdmissionEngine:
     def flush(self) -> int:
         """Decide every pending request in fixed-width micro-batches (or one
         by one on the naive ablation path); resolves their futures. Returns
-        the number of decisions made."""
-        if self._out is None:
-            raise RuntimeError("flush() before the first tick()")
-        with self._lock:
-            pending, self._pending = self._pending, []
-        if not pending:
-            return 0
-        chunk = 1 if self.naive else self.width
-        with annotate("repro.engine.flush"):
-            for i in range(0, len(pending), chunk):
-                part = pending[i:i + chunk]
-                accept = self._decide([a for a, _, _ in part])
-                self._trace_part(part, accept)
-                for (_, fut, _), ok in zip(part, accept):
-                    fut.set_result(bool(ok))
+        the number of decisions made.
+
+        The whole drain runs under ``_state_lock``: the ``_out`` check and
+        the decides it gates are one critical section, so a concurrent
+        ``tick()``/``metrics()`` cannot close the window mid-flight. A chunk
+        that raises fails every remaining future with the exception instead
+        of leaving callers blocked forever."""
         with self._state_lock:
+            if self._out is None:
+                raise RuntimeError("flush() before the first tick()")
+            with self._lock:
+                pending, self._pending = self._pending, []
+            if not pending:
+                return 0
+            chunk = 1 if self.naive else self.width
+            t0 = time.monotonic()
+            done = 0
+            try:
+                with annotate("repro.engine.flush"):
+                    for i in range(0, len(pending), chunk):
+                        part = pending[i:i + chunk]
+                        accept = self._decide([a for a, _, _ in part])
+                        self._trace_part(part, accept)
+                        for (_, fut, _), ok in zip(part, accept):
+                            fut.set_result(bool(ok))
+                        done = i + len(part)
+            except BaseException as exc:
+                for _, fut, _ in pending[done:]:
+                    if not fut.done():
+                        fut.set_exception(exc)
+                raise
+            cost = time.monotonic() - t0
+            self._flush_cost_s = (cost if self._flush_cost_s == 0.0
+                                  else 0.8 * self._flush_cost_s + 0.2 * cost)
             self.n_flushes += 1
         return len(pending)
 
@@ -463,19 +534,26 @@ class OnlineAdmissionEngine:
         """Record one decided micro-batch chunk: submit→decision latency
         into the host histogram, plus (when a tracer is attached) one
         structured record per decision with the policy score/threshold from
-        the traced decide path."""
+        the traced decide path. The diag arrays are materialized to numpy
+        once per chunk before the record loop — indexing the device arrays
+        per record would cost one device→host sync per decision."""
         t_dec = time.monotonic()
         diag = self._last_diag
+        if diag is not None and self.tracer is not None:
+            diag = jax.tree.map(np.asarray, diag)
         with self._state_lock:
             self._hist_batch.observe(float(len(part)))
             for j, ((_, _, t_sub), ok) in enumerate(zip(part, accept)):
-                self._hist_latency.observe(t_dec - t_sub)
+                lat = t_dec - t_sub
+                self._hist_latency.observe(lat)
+                if self.flush_slo_s is not None and lat > self.flush_slo_s:
+                    self.deadline_misses += 1
                 if self.tracer is None:
                     continue
                 self._req_id += 1
                 rec = dict(step=self.ticks, req_id=self._req_id,
                            policy_kind=self._policy_info["kind"],
-                           verdict=bool(ok), latency_s=t_dec - t_sub,
+                           verdict=bool(ok), latency_s=lat,
                            batch_size=len(part))
                 if diag is not None:
                     rec["score"] = diag.score[j]
@@ -491,11 +569,13 @@ class OnlineAdmissionEngine:
         zero-copy path the equivalence tests and benchmarks drive; ``submit``
         + ``flush`` stack onto exactly this). Returns the ``[A]`` accept
         mask (for fleets: OR over the per-cluster ``[C, A]`` decisions)."""
-        if self._out is None:
-            raise RuntimeError("decide_slice() before the first tick()")
         valid = jnp.asarray(valid)
         fn = self._j_naive if self.naive else self._j_decide
         with self._state_lock:
+            # checked under the lock: a concurrent tick()/metrics() closing
+            # the window flips _out to None mid-flight otherwise
+            if self._out is None:
+                raise RuntimeError("decide_slice() before the first tick()")
             self._last_diag = None
             if not self.fleet:
                 if self.tracer is not None and not self.naive:
@@ -547,28 +627,75 @@ class OnlineAdmissionEngine:
 
     def start(self, interval_s: float = 0.001):
         """Run the flush loop on a background thread: concurrent submitters
-        get their futures resolved as the engine coalesces the queue."""
+        get their futures resolved as the engine coalesces the queue.
+
+        Without ``flush_slo_ms`` this is the legacy pump (poll every
+        ``interval_s``, drain whatever is queued). With ``flush_slo_ms`` set
+        it is the deadline scheduler (``_deadline_loop``): fire a full
+        micro-batch the moment ``width`` requests are pending, otherwise
+        fire a partial batch when the oldest pending request approaches its
+        latency SLO."""
         if self._pump is not None:
             raise RuntimeError("engine pump already running")
         self._stop.clear()
-
-        def loop():
-            while not self._stop.is_set():
-                t0 = time.monotonic()
-                if self.n_pending:
-                    self.flush()
-                    self._pump_busy_s += time.monotonic() - t0
-                else:
-                    self._stop.wait(interval_s)
-                    self._pump_idle_s += time.monotonic() - t0
-
-        self._pump = threading.Thread(target=loop, daemon=True)
+        target = (self._deadline_loop if self.flush_slo_s is not None
+                  else lambda: self._pump_loop(interval_s))
+        self._pump = threading.Thread(target=target, daemon=True)
         self._pump.start()
+
+    def _pump_loop(self, interval_s: float):
+        while not self._stop.is_set():
+            t0 = time.monotonic()
+            if self.n_pending:
+                self.flush()
+                self._pump_busy_s += time.monotonic() - t0
+            else:
+                self._stop.wait(interval_s)
+                self._pump_idle_s += time.monotonic() - t0
+
+    def _deadline_loop(self):
+        """Latency-SLO-aware flush scheduler. Each ``submit()`` stamps its
+        enqueue time; the oldest pending request's implicit deadline is
+        ``t_sub + flush_slo_s``. Under load the width trigger fires full
+        micro-batches (max throughput); at low rate the deadline trigger
+        fires a partial batch a safety margin before the oldest request's
+        deadline, where the margin is an EWMA of observed flush cost (so
+        decisions land before — not at — the SLO) floored at 5% of the SLO.
+
+        The condition's lock is released before flushing: ``flush()`` takes
+        ``_state_lock`` then ``_lock``, and ``metrics_snapshot`` holds
+        ``_state_lock`` while reading ``n_pending`` — flushing while holding
+        ``_lock`` would invert that ordering and deadlock."""
+        slo = self.flush_slo_s
+        while not self._stop.is_set():
+            fire = False
+            with self._work:
+                while not self._stop.is_set() and not fire:
+                    if len(self._pending) >= self.width:
+                        fire = True
+                    elif self._pending:
+                        margin = max(2.0 * self._flush_cost_s, 0.05 * slo)
+                        due = self._pending[0][2] + slo - margin
+                        wait = due - time.monotonic()
+                        if wait <= 0.0:
+                            fire = True
+                        else:
+                            self._work.wait(wait)
+                    else:
+                        t0 = time.monotonic()
+                        self._work.wait()
+                        self._pump_idle_s += time.monotonic() - t0
+            if fire:
+                t0 = time.monotonic()
+                self.flush()
+                self._pump_busy_s += time.monotonic() - t0
 
     def stop(self):
         if self._pump is None:
             return
         self._stop.set()
+        with self._work:
+            self._work.notify_all()
         self._pump.join()
         self._pump = None
         self.flush()
@@ -631,6 +758,10 @@ class OnlineAdmissionEngine:
                                        if idle + busy > 0 else 0.0),
                 "decision_latency_seconds": self._hist_latency.snapshot(),
                 "flush_batch_size": self._hist_batch.snapshot(),
+                "deadline_misses": self.deadline_misses,
+                "flush_slo_ms": (0.0 if self.flush_slo_s is None
+                                 else self.flush_slo_s * 1e3),
+                "n_shards": self.n_shards,
             }
         snap = {"engine": eng}
         if tel_copy is not None:

@@ -13,6 +13,7 @@ from .simulator import (AGG_FUSED, AGG_KERNEL, AGG_REFERENCE, GLOBAL, PSEUDO,
                         draw_arrival_stream, make_admission_core, make_config,
                         make_fleet_config, make_fleet_run, make_run,
                         run_batch, run_keyed_batch, stream_config)
+from .core import slot_mesh
 from .routing import (ROUTERS, LeastUtilizedRouter, PowerOfTwoRouter,
                       RandomRouter, RouteContext, Router,
                       ThresholdCascadeRouter)
@@ -32,7 +33,7 @@ __all__ = [
     "StepOutcome", "broadcast_policy", "draw_arrival_stream",
     "make_admission_core", "make_config", "make_fleet_config",
     "make_fleet_run", "make_run",
-    "run_batch", "run_keyed_batch", "stream_config",
+    "run_batch", "run_keyed_batch", "slot_mesh", "stream_config",
     "ROUTERS", "LeastUtilizedRouter", "PowerOfTwoRouter", "RandomRouter",
     "RouteContext", "Router", "ThresholdCascadeRouter",
     "CI", "bca_ci", "fleet_sla_failure_rate", "fleet_utilization",

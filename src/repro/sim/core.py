@@ -42,7 +42,8 @@ from ..core.belief import (GammaBelief, apply_pseudo_observations,
                            belief_from_prior, observe_initial_size,
                            update_on_events)
 from ..core.moments import (MomentCurves, aggregate_moment_curves,
-                            moment_curves, moment_curves_fused)
+                            masked_curve_reduction, moment_curves,
+                            moment_curves_fused)
 from ..core.policies import (ZEROTH, PolicyParams, admit_sequential,
                              admit_sequential_verbose)
 from ..core.pricing import mixture_moments
@@ -504,6 +505,25 @@ def _step_dynamics(cfg: SimConfig, capacity, key, state: SimState,
     return state, util, failed, jnp.sum(n_req), departed, stats
 
 
+def slot_mesh(n_shards: int, devices=None):
+    """A 1-d device mesh named ``"slots"`` over the first ``n_shards``
+    devices — the mesh ``make_admission_core(..., mesh=...)`` shards the
+    slot axis of ``CoreState`` over. Raises with guidance when the process
+    has too few devices (CPU runs get more via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    from jax.sharding import Mesh
+
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if n_shards < 1:
+        raise ValueError(f"n_shards={n_shards} must be >= 1")
+    if n_shards > len(devices):
+        raise ValueError(
+            f"n_shards={n_shards} exceeds the {len(devices)} visible "
+            "device(s); on CPU, export "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_shards}")
+    return Mesh(np.asarray(devices[:n_shards]), ("slots",))
+
+
 class AdmissionCore(NamedTuple):
     """Bundle of pure functions over ``CoreState`` for one static
     configuration (see module docstring). Built by ``make_admission_core``;
@@ -524,13 +544,22 @@ class AdmissionCore(NamedTuple):
 
 
 def make_admission_core(cfg: SimConfig, grid: jax.Array,
-                        policy_kind: int) -> AdmissionCore:
+                        policy_kind: int, *, mesh=None) -> AdmissionCore:
     """Build the pure admission-core function bundle for one configuration.
 
     All five functions are pure pytree -> pytree maps (no python state), so
     the offline drivers scan them, the fleet vmaps them over the cluster
     axis, and the online engine jits them individually with donated
     ``CoreState`` buffers — one implementation, three execution regimes.
+
+    ``mesh`` (optional, a 1-d ``jax.sharding.Mesh`` — see ``slot_mesh``)
+    selects the **device-sharded lane**: ``CoreState``'s slot axis is
+    partitioned over the mesh so one engine's state scales with device
+    count, and ``refresh_aggregates`` evaluates each shard's per-slot moment
+    curves locally before reducing them in the unsharded path's exact block
+    order — decisions and metrics stay bit-for-bit identical to the
+    single-device core (see ``_shard_over_slots``). ``mesh=None`` (the
+    default) is exactly the historical single-device core.
     """
     _validate_config(cfg)
     needs_moments = policy_kind != ZEROTH
@@ -619,9 +648,153 @@ def make_admission_core(cfg: SimConfig, grid: jax.Array,
         return _decide_core(policy, cs, util, cand, stream_t, valid,
                             verbose=True)
 
-    return AdmissionCore(cfg=cfg, grid=grid, policy_kind=policy_kind,
+    core = AdmissionCore(cfg=cfg, grid=grid, policy_kind=policy_kind,
                          needs_moments=needs_moments, n_grid=n_grid,
                          init=init, refresh_aggregates=refresh_aggregates,
                          apply_events=apply_events, candidates=candidates_fn,
                          decide_batch=decide_batch,
                          decide_batch_traced=decide_batch_traced)
+    if mesh is None:
+        return core
+    return _shard_over_slots(core, mesh)
+
+
+def _shard_over_slots(core: AdmissionCore, mesh) -> AdmissionCore:
+    """Wrap an ``AdmissionCore`` so ``CoreState``'s slot axis is sharded
+    over ``mesh`` (one named axis), keeping decisions and metrics
+    **bit-for-bit identical** to the unsharded core.
+
+    What is sharded vs replicated, and why equality holds exactly:
+
+      * The slot table and per-deployment beliefs (every ``[S]`` leaf of
+        ``SimState``) live partitioned, ``S / n_shards`` slots per device —
+        the state whose size the ROADMAP wants to scale with device count.
+      * ``refresh_aggregates`` — the engine's dominant O(S·N) cost —
+        evaluates each shard's per-slot moment curves locally, all-gathers
+        the (elementwise, hence bitwise-identical) ``[S, N]`` curve values,
+        and reduces them via ``masked_curve_reduction``, which replays the
+        unsharded fused path's exact einsum/block-fold order. A per-shard
+        partial-sum + tree-reduce would NOT be bitwise equal (float sums
+        are order-sensitive); gathering the curves and reducing in the
+        canonical order is what buys exact equality.
+      * Per-step dynamics and admission (O(S) / O(A·N) — cheap next to the
+        refresh) run replicated on the gathered slot table and re-slice the
+        updated ``[S]`` leaves back to the local shard: every device runs
+        the same ops on the same data (including the step's random event
+        draws from the replicated key, which keeps global-shape threefry
+        semantics), so the replicated outputs are identical by
+        construction. ``check_vma`` stays off accordingly.
+      * Scalar accumulators, aggregate curves, the telemetry rider, policy
+        parameters and arrival batches are replicated (``P()``).
+
+    Donation still works: the engine's ``jit(..., donate_argnums=...)``
+    wraps these shard_mapped functions and the sharded-in/sharded-out
+    specs let XLA reuse the slot-table buffers in place.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..compat import shard_map
+
+    cfg, grid = core.cfg, core.grid
+    if len(mesh.axis_names) != 1:
+        raise ValueError(f"mesh must have exactly one axis, got "
+                         f"{mesh.axis_names}")
+    ax = mesh.axis_names[0]
+    n_shards = int(mesh.devices.size)
+    if cfg.max_slots % n_shards:
+        raise ValueError(
+            f"max_slots={cfg.max_slots} must be divisible by the "
+            f"{n_shards}-device mesh")
+    if cfg.agg_backend != AGG_FUSED:
+        raise ValueError(
+            f"sharded admission core requires agg_backend={AGG_FUSED!r} "
+            f"(got {cfg.agg_backend!r}): the sharded refresh mirrors the "
+            "fused block reduction bit-for-bit")
+    s_local = cfg.max_slots // n_shards
+
+    rep = lambda tree: jax.tree.map(lambda _: P(), tree)
+    cs_t = jax.eval_shape(core.init)
+    cs_specs = CoreState(
+        slots=cs_t.slots._replace(
+            alive=P(ax), cores=P(ax),
+            params=jax.tree.map(lambda _: P(ax), cs_t.slots.params),
+            bel=jax.tree.map(lambda _: P(ax), cs_t.slots.bel),
+            core_hours=P(), fail_requests=P(), total_requests=P(),
+            arr_accepted=P(), arr_rejected=P(), slot_overflow=P(),
+            n_departed=P()),
+        agg_el=P(), agg_vl=P(),
+        tel=rep(cs_t.tel) if cs_t.tel is not None else None)
+
+    gather = lambda x: jax.lax.all_gather(x, ax, axis=0, tiled=True)
+
+    def gather_slots(slots: SimState) -> SimState:
+        return jax.tree.map(lambda x: gather(x) if x.ndim else x, slots)
+
+    def slice_slots(slots: SimState) -> SimState:
+        i = jax.lax.axis_index(ax)
+        loc = lambda x: jax.lax.dynamic_slice_in_dim(x, i * s_local,
+                                                     s_local, axis=0)
+        return jax.tree.map(lambda x: loc(x) if x.ndim else x, slots)
+
+    def sharded_init() -> CoreState:
+        cs = core.init()
+        shardings = jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                                 cs_specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        return jax.device_put(cs, shardings)
+
+    def _local_refresh(cs: CoreState) -> CoreState:
+        tel = mark_refresh(cs.tel) if cfg.telemetry else cs.tel
+        if not core.needs_moments:
+            return cs._replace(agg_el=jnp.zeros((core.n_grid,)),
+                               agg_vl=jnp.zeros((core.n_grid,)), tel=tel)
+        # the O(S*N) per-slot curve math runs on the local shard only; the
+        # gathered curves are then reduced in the canonical block order
+        cur = moment_curves_fused(cs.slots.bel, cs.slots.cores, grid,
+                                  cfg.priors, d_points=cfg.d_points)
+        mask = cs.slots.alive.astype(grid.dtype)
+        agg = masked_curve_reduction(jax.tree.map(gather, cur), gather(mask))
+        return cs._replace(agg_el=agg.EL, agg_vl=agg.VL, tel=tel)
+
+    sm_refresh = shard_map(_local_refresh, mesh=mesh, in_specs=(cs_specs,),
+                           out_specs=cs_specs, check_vma=False)
+
+    def _local_apply(key, cs: CoreState, capacity):
+        full, out = core.apply_events(
+            key, cs._replace(slots=gather_slots(cs.slots)), capacity)
+        return full._replace(slots=slice_slots(full.slots)), out
+
+    sm_apply = shard_map(
+        _local_apply, mesh=mesh, in_specs=(P(), cs_specs, P()),
+        out_specs=(cs_specs, P()), check_vma=False)
+
+    def sharded_apply(key, cs: CoreState, capacity=None):
+        cap = jnp.asarray(cfg.capacity if capacity is None else capacity,
+                          jnp.float32)
+        return sm_apply(key, cs, cap)
+
+    def _local_decide(policy, cs, util, cand, stream_t, valid):
+        full, accept = core.decide_batch(
+            policy, cs._replace(slots=gather_slots(cs.slots)), util, cand,
+            stream_t, valid)
+        return full._replace(slots=slice_slots(full.slots)), accept
+
+    sm_decide = shard_map(
+        _local_decide, mesh=mesh,
+        in_specs=(P(), cs_specs, P(), P(), P(), P()),
+        out_specs=(cs_specs, P()), check_vma=False)
+
+    def _local_decide_traced(policy, cs, util, cand, stream_t, valid):
+        full, accept, diag = core.decide_batch_traced(
+            policy, cs._replace(slots=gather_slots(cs.slots)), util, cand,
+            stream_t, valid)
+        return full._replace(slots=slice_slots(full.slots)), accept, diag
+
+    sm_decide_traced = shard_map(
+        _local_decide_traced, mesh=mesh,
+        in_specs=(P(), cs_specs, P(), P(), P(), P()),
+        out_specs=(cs_specs, P(), P()), check_vma=False)
+
+    return core._replace(init=sharded_init, refresh_aggregates=sm_refresh,
+                         apply_events=sharded_apply, decide_batch=sm_decide,
+                         decide_batch_traced=sm_decide_traced)

@@ -214,3 +214,244 @@ def test_operating_point_roundtrip(tmp_path):
         param = default_policy_param("zeroth", 1_000.0,
                                      bench_path=str(missing))
     assert param == 700.0
+
+
+# ---------------------------------------------------------------------------
+# PR 9: sharded slot table, deadline-aware flush, concurrency bugfix pass
+# ---------------------------------------------------------------------------
+
+
+def _zero_events(cfg):
+    s = cfg.max_slots
+    return ExternalEvents(core_deaths=np.zeros(s, np.float32),
+                          spont_death=np.zeros(s, bool),
+                          scaleout_cores=np.zeros(s, np.float32),
+                          n_scaleouts=np.zeros(s, np.float32))
+
+
+def test_shards_validation_errors():
+    from repro.sim import slot_mesh
+
+    pol = make_policy(SECOND, rho=0.05, capacity=SMALL.capacity)
+    # more shards than visible devices: actionable XLA_FLAGS guidance
+    with pytest.raises(ValueError, match="host_platform_device_count"):
+        OnlineAdmissionEngine(SMALL, GRID, SECOND, pol,
+                              shards=jax.device_count() + 1)
+    with pytest.raises(ValueError, match="n_shards"):
+        slot_mesh(0)
+    # fleet engines spread state over the cluster axis, not slot shards
+    fleet = FleetConfig(base=SMALL, capacities=(300.0, 200.0))
+    fpol = fleet_policy(SECOND, capacities=fleet.capacities, rho=0.05)
+    with pytest.raises(ValueError, match="fleet"):
+        OnlineAdmissionEngine(fleet, GRID, SECOND, fpol, shards=2)
+
+
+def test_event_path_keys_derive_from_seed_chain():
+    """Regression (PR 9): the observed-events tick path used to reseed with
+    PRNGKey(self.ticks) — identical across engines and restarts. The key
+    must now derive from the engine's seed chain: same seed => same chain,
+    different seeds => diverging chains, and the chain advances per tick."""
+    pol = make_policy(ZEROTH, threshold=SMALL.capacity,
+                      capacity=SMALL.capacity)
+    ev = _zero_events(SMALL)
+    e_a = OnlineAdmissionEngine(SMALL, GRID, ZEROTH, pol, seed=0)
+    e_b = OnlineAdmissionEngine(SMALL, GRID, ZEROTH, pol, seed=1)
+    e_a2 = OnlineAdmissionEngine(SMALL, GRID, ZEROTH, pol, seed=0)
+    for e in (e_a, e_b, e_a2):
+        e.tick(events=ev)
+    k_a, k_b, k_a2 = (np.asarray(e._step_key) for e in (e_a, e_b, e_a2))
+    assert np.array_equal(k_a, k_a2)          # restart-reproducible
+    assert not np.array_equal(k_a, k_b)       # engines decorrelate
+    e_a.tick(events=ev)
+    assert not np.array_equal(np.asarray(e_a._step_key), k_a)  # advances
+
+
+def test_close_window_counter_idempotence():
+    """Regression (PR 9): _close_window now zeroes the window accept/reject
+    accumulators after folding them, so metrics() twice in a row (or
+    metrics() followed by tick()) cannot double-count decisions."""
+    pol = make_policy(ZEROTH, threshold=SMALL.capacity,
+                      capacity=SMALL.capacity)
+    key = jax.random.PRNGKey(11)
+    eng = OnlineAdmissionEngine(SMALL, GRID, ZEROTH, pol, micro_batch=4)
+    eng.tick(jax.random.PRNGKey(0))
+    futs = [eng.submit(Arrival.draw(k, SMALL))
+            for k in jax.random.split(key, 3)]
+    eng.flush()
+    assert all(f.result() for f in futs)      # empty cluster, thr=capacity
+    m1 = eng.metrics()
+    m2 = eng.metrics()                        # second close: no-op
+    assert int(m1.arrivals_accepted) == int(m2.arrivals_accepted) == 3
+    eng.tick(jax.random.PRNGKey(1))
+    m3 = eng.metrics()
+    assert int(m3.arrivals_accepted) == 3     # tick didn't re-fold them
+
+
+def test_flush_failure_resolves_futures_with_exception():
+    """A decide chunk that raises must fail the queued futures instead of
+    leaving callers blocked forever."""
+    pol = make_policy(ZEROTH, threshold=SMALL.capacity,
+                      capacity=SMALL.capacity)
+    eng = OnlineAdmissionEngine(SMALL, GRID, ZEROTH, pol, micro_batch=2)
+    eng.tick(jax.random.PRNGKey(0))
+    futs = [eng.submit(Arrival.draw(k, SMALL))
+            for k in jax.random.split(jax.random.PRNGKey(1), 3)]
+    boom = RuntimeError("decide exploded")
+
+    def bad_decide(arrivals):
+        raise boom
+
+    eng._decide = bad_decide
+    with pytest.raises(RuntimeError, match="decide exploded"):
+        eng.flush()
+    for f in futs:
+        assert f.done()
+        with pytest.raises(RuntimeError, match="decide exploded"):
+            f.result(timeout=0)
+
+
+def test_deadline_scheduler_fires_partial_and_full_batches():
+    """flush_slo_ms switches start() to the deadline scheduler: paced
+    sub-width load resolves via the deadline trigger within the SLO (zero
+    recorded misses after warmup), and a width-sized burst fires on the
+    width trigger without waiting for any deadline."""
+    import time as _time
+
+    pol = make_policy(ZEROTH, threshold=SMALL.capacity,
+                      capacity=SMALL.capacity)
+    eng = OnlineAdmissionEngine(SMALL, GRID, ZEROTH, pol, micro_batch=4,
+                                flush_slo_ms=500.0)
+    eng.tick(jax.random.PRNGKey(0))
+    eng._decide([Arrival.draw(jax.random.PRNGKey(1), SMALL)])  # compile
+    eng.start()
+    try:
+        # deadline trigger: 2 < width requests, nothing else arrives
+        futs = [eng.submit(Arrival.draw(k, SMALL))
+                for k in jax.random.split(jax.random.PRNGKey(2), 2)]
+        t0 = _time.monotonic()
+        assert all(f.result(timeout=10) for f in futs)
+        assert _time.monotonic() - t0 <= 0.5 + 5.0   # resolved near the SLO
+        # width trigger: a full batch goes immediately
+        futs = [eng.submit(Arrival.draw(k, SMALL))
+                for k in jax.random.split(jax.random.PRNGKey(3), 4)]
+        assert all(isinstance(f.result(timeout=10), bool) for f in futs)
+    finally:
+        eng.stop()
+    snap = eng.metrics_snapshot()["engine"]
+    assert snap["deadline_misses"] == 0
+    assert snap["flush_slo_ms"] == 500.0
+    assert snap["n_shards"] == 1
+    assert snap["decision_latency_seconds"].total == 6
+    with pytest.raises(ValueError, match="flush_slo_ms"):
+        OnlineAdmissionEngine(SMALL, GRID, ZEROTH, pol, flush_slo_ms=-1.0)
+
+
+def test_concurrency_stress_ticker_pump_submitters():
+    """Ticker thread + background pump + N submitter threads: no exception
+    anywhere, every future resolves, and the decisions equal a serial
+    replay (deterministic zero-event dynamics + threshold=capacity make the
+    outcome interleaving-invariant: everything fits, everything admits)."""
+    import threading
+
+    pol = make_policy(ZEROTH, threshold=SMALL.capacity,
+                      capacity=SMALL.capacity)
+    eng = OnlineAdmissionEngine(SMALL, GRID, ZEROTH, pol, micro_batch=4)
+    ev = _zero_events(SMALL)
+    eng.tick(events=ev)
+    n_sub, per_sub = 3, 8
+    arrivals = [[Arrival.draw(jax.random.PRNGKey(100 * i + j), SMALL)
+                 for j in range(per_sub)] for i in range(n_sub)]
+    results: dict = {}
+    errors: list = []
+    stop_ticks = threading.Event()
+
+    def ticker():
+        try:
+            while not stop_ticks.is_set():
+                eng.tick(events=ev)
+                eng.metrics_snapshot()        # scrape racing the pump
+        except Exception as exc:              # pragma: no cover
+            errors.append(exc)
+
+    def submitter(i):
+        try:
+            futs = [eng.submit(a) for a in arrivals[i]]
+            results[i] = [f.result(timeout=60) for f in futs]
+        except Exception as exc:              # pragma: no cover
+            errors.append(exc)
+
+    eng.start(interval_s=0.0)
+    threads = [threading.Thread(target=ticker)]
+    threads += [threading.Thread(target=submitter, args=(i,))
+                for i in range(n_sub)]
+    for t in threads:
+        t.start()
+    for t in threads[1:]:
+        t.join(timeout=120)
+    stop_ticks.set()
+    threads[0].join(timeout=120)
+    eng.stop()
+    assert not errors, errors
+    assert not any(t.is_alive() for t in threads)
+    assert sorted(results) == list(range(n_sub))
+    # serial replay: fresh engine, same arrivals, single thread
+    ref = OnlineAdmissionEngine(SMALL, GRID, ZEROTH, pol, micro_batch=4)
+    ref.tick(events=ev)
+    for i in range(n_sub):
+        futs = [ref.submit(a) for a in arrivals[i]]
+        ref.flush()
+        assert results[i] == [f.result() for f in futs]
+    assert eng.decisions == n_sub * per_sub
+
+
+@pytest.mark.slow
+def test_sharded_engine_matches_unsharded_on_virtual_devices():
+    """Tentpole acceptance (PR 9): on 8 virtual CPU devices, a shards=8
+    engine is decision- and metric-equivalent — bit-for-bit — to the
+    unsharded engine over the same stream, including the telemetry rider."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", """
+import jax, numpy as np
+from repro.core import AZURE_PRIORS, SECOND, geometric_grid, make_policy
+from repro.serve import OnlineAdmissionEngine
+from repro.sim import SimConfig, draw_arrival_stream
+
+cfg = SimConfig(capacity=500.0, arrival_rate=0.08, horizon_hours=6*24.0,
+                dt=24.0, max_slots=32, max_arrivals=4, d_points=8,
+                priors=AZURE_PRIORS, agg_refresh_steps=1, telemetry=True)
+grid = geometric_grid(24.0, 3*30*24.0, 12)
+pol = make_policy(SECOND, rho=0.05, capacity=cfg.capacity)
+k_stream, k_scan = jax.random.split(jax.random.PRNGKey(1))
+stream = draw_arrival_stream(k_stream, cfg)
+keys = jax.random.split(k_scan, cfg.n_steps)
+n_arr = np.asarray(stream.n_arrivals)
+n_lanes = stream.c0.shape[1]
+
+def drive(engine):
+    acc = []
+    for t in range(keys.shape[0]):
+        engine.tick(keys[t])
+        sl = jax.tree.map(lambda x: x[t], stream)
+        acc.append(engine.decide_slice(sl, np.arange(n_lanes) < n_arr[t]))
+    return np.stack(acc), engine.metrics(), engine.metrics_snapshot()
+
+assert jax.device_count() == 8
+a1, m1, s1 = drive(OnlineAdmissionEngine(cfg, grid, SECOND, pol))
+a8, m8, s8 = drive(OnlineAdmissionEngine(cfg, grid, SECOND, pol, shards=8))
+np.testing.assert_array_equal(a1, a8)
+for name in m1._fields:
+    np.testing.assert_array_equal(np.asarray(getattr(m1, name)),
+                                  np.asarray(getattr(m8, name)),
+                                  err_msg=name)
+assert s1['telemetry'] == s8['telemetry']
+assert s8['engine']['n_shards'] == 8
+print('OK', int(np.sum(a8)))
+"""], env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.startswith("OK")

@@ -262,6 +262,48 @@ def test_engine_tracer_writes_jsonl(engine_run):
     assert n_admit == float(np.sum(eng.metrics().arrivals_accepted))
 
 
+def test_tracer_diag_materialized_once_per_chunk():
+    """Regression (PR 9): ``_trace_part`` materializes the decision diag to
+    numpy once per chunk before the record loop. Asserted structurally (the
+    tracer receives numpy scalars, never device arrays — each device-array
+    index is one device->host sync) and by timing (the chunk-level
+    materialization is cheaper than per-record device reads)."""
+    recorded = []
+
+    class SpyTracer:
+        def record(self, **fields):
+            recorded.append(fields)
+
+    width = 64
+    cfg = SMALL._replace(max_arrivals=width)
+    pol = make_policy(SECOND, rho=0.05, capacity=cfg.capacity)
+    eng = OnlineAdmissionEngine(cfg, GRID, SECOND, pol, micro_batch=width,
+                                tracer=SpyTracer())
+    eng.tick(jax.random.PRNGKey(0))
+    keys = jax.random.split(jax.random.PRNGKey(1), width)
+    for k in keys:
+        eng.submit(Arrival.draw(k, cfg))
+    eng.flush()
+    assert len(recorded) == width
+    for rec in recorded:
+        for field in ("score", "threshold", "fits"):
+            assert not isinstance(rec[field], jax.Array), field
+
+    diag = eng._last_diag
+    assert diag is not None
+    n_rep = 10
+    t0 = time.perf_counter()
+    for _ in range(n_rep):
+        d = jax.tree.map(np.asarray, diag)    # what _trace_part does
+        [float(d.score[j]) for j in range(width)]
+    once_per_chunk = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(n_rep):
+        [float(diag.score[j]) for j in range(width)]   # the old per-record
+    per_record = time.perf_counter() - t0              # device reads
+    assert once_per_chunk < per_record, (once_per_chunk, per_record)
+
+
 def test_snapshot_off_has_no_telemetry_key():
     cfg = SMALL._replace(telemetry=False, horizon_hours=2 * 24.0,
                          agg_refresh_steps=1)
